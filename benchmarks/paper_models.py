@@ -1,0 +1,128 @@
+"""Paper reproduction benchmarks: one section per table/figure.
+
+Each function prints CSV-ish rows and returns True/False for its headline
+claim; benchmarks/run.py aggregates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    LASSEN,
+    SUMMIT,
+    Locality,
+    TABLE_I,
+    TABLE_III_BETA_N,
+    gpudirect_time,
+    memcpy_time,
+    paper_model,
+    three_step_time,
+)
+from repro.core.fitting import round_trip_check
+from repro.core.maxrate import MaxRateParams, node_split_time
+from repro.core.params import CopyDirection, Protocol, TABLE_II
+from repro.core.planner import message_count_crossover, plan_gpu_collective, CollectiveKind
+from repro.core.simulate import CollectiveProblem, simulate_all
+
+
+def table1_postal_fit() -> bool:
+    """Round-trip: generate samples from Table I params, re-fit, compare."""
+    print("# table1: postal-parameter fit round-trip (max rel err per model)")
+    worst = 0.0
+    for machine in ("summit", "lassen"):
+        for dev in ("cpu", "gpu"):
+            for loc in Locality:
+                model = paper_model(machine, dev, loc)
+                _, err = round_trip_check(model, noise=0.0)
+                worst = max(worst, err)
+                print(f"table1,{machine},{dev},{loc.value},max_rel_err={err:.4f}")
+    print(f"table1,WORST,{worst:.4f}")
+    return worst < 0.05
+
+
+def table2_memcpy() -> bool:
+    print("# table2: cudaMemcpyAsync latencies (model @ 1MB)")
+    ok = True
+    for machine in ("summit", "lassen"):
+        for sock in ("on-socket", "off-socket"):
+            for d in CopyDirection:
+                t = TABLE_II[machine][sock][d].time(1 << 20)
+                print(f"table2,{machine},{sock},{d.value},t_1MB={t*1e6:.1f}us")
+        on = TABLE_II[machine]["on-socket"][CopyDirection.D2H].time(1 << 20)
+        off = TABLE_II[machine]["off-socket"][CopyDirection.D2H].time(1 << 20)
+        ok &= on < off
+    return ok
+
+
+def table3_injection() -> bool:
+    print("# table3: injection caps -> saturating core counts")
+    ok = True
+    for machine in ("summit", "lassen"):
+        beta_N = TABLE_III_BETA_N[machine]["cpu"]
+        p = TABLE_I[machine]["cpu"][Protocol.REND][Locality.OFF_NODE]
+        sat = p.beta / beta_N
+        print(f"table3,{machine},cpu,R_N={1/beta_N/1e9:.1f}GB/s,saturating_ppn={sat:.1f}")
+        ok &= 1 < sat < 40
+    return ok
+
+
+def fig3_single_message() -> bool:
+    print("# fig3: single-message path costs (model)")
+    sizes = np.logspace(1, np.log10(512 * 1024), 12)
+    ok = True
+    for machine in ("summit", "lassen"):
+        d = gpudirect_time(machine, sizes, 1, 1)
+        s = three_step_time(machine, sizes, 1, 1, 1)
+        ok &= bool((d <= s * (1 + 1e-9)).all())
+        for sz, dd, ss in list(zip(sizes, d, s))[::4]:
+            print(f"fig3,{machine},s={int(sz)},gpudirect={dd*1e6:.1f}us,3step={ss*1e6:.1f}us")
+    print(f"fig3,claim_gpudirect_wins_plotted_range,{ok}")
+    return ok
+
+
+def fig4_ppn_scaling() -> bool:
+    print("# fig4: node payload split over ppn cores (64 MiB, Summit)")
+    p = TABLE_I["summit"]["cpu"][Protocol.REND][Locality.OFF_NODE]
+    params = MaxRateParams(p.alpha, p.beta, TABLE_III_BETA_N["summit"]["cpu"])
+    times = {}
+    for ppn in (1, 2, 4, 10, 20, 40):
+        t = float(node_split_time(params, 64 * 2**20, ppn))
+        times[ppn] = t
+        print(f"fig4,summit,ppn={ppn},t={t*1e3:.2f}ms")
+    return times[40] == min(times.values())
+
+
+def fig5_crossovers() -> bool:
+    print("# fig5: message-count crossovers (1 KiB msgs)")
+    ns = message_count_crossover(SUMMIT, 1024)
+    nl = message_count_crossover(LASSEN, 1024)
+    print(f"fig5,summit,crossover_n={ns}")
+    print(f"fig5,lassen,crossover_n={nl}")
+    return ns is not None and ns <= 10 and nl is not None and 10 < nl <= 150
+
+
+def fig6_collectives() -> bool:
+    print("# fig6: Alltoallv strategy ranking, 32 nodes")
+    ok = True
+    for topo in (SUMMIT, LASSEN):
+        for s, expect in ((8.0, "extra_msg"), (float(2**22), "dup_devptr")):
+            p = CollectiveProblem(topo=topo, nodes=32, msg_bytes=s, split_messages=True)
+            costs = simulate_all(p)
+            best = min(costs, key=costs.get)
+            ok &= best == expect
+            row = ",".join(f"{k}={v*1e3:.3f}ms" for k, v in costs.items())
+            print(f"fig6,{topo.machine},s={int(s)},best={best},{row}")
+    plan = plan_gpu_collective(SUMMIT, 32, 8.0, CollectiveKind.ALLTOALLV)
+    print(f"fig6,planner_small_speedup_vs_cuda_aware={plan.speedup_over('cuda_aware'):.1f}x")
+    return ok
+
+
+ALL = [
+    table1_postal_fit,
+    table2_memcpy,
+    table3_injection,
+    fig3_single_message,
+    fig4_ppn_scaling,
+    fig5_crossovers,
+    fig6_collectives,
+]

@@ -1,0 +1,45 @@
+"""Re-run the HLO cost analysis over stored dry-run HLO dumps.
+
+The dry-run persists each cell's compiled HLO (``*.hlo.gz``); when the
+traffic/flops model in repro.launch.hlo_analysis evolves, this refreshes
+every record's ``hlo_cost`` without recompiling anything.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+
+
+def main(outdir: str = "results/dryrun"):
+    n = 0
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        hlo_path = path.replace(".json", ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        with gzip.open(hlo_path, "rt") as zf:
+            hlo = zf.read()
+        hc = analyze(hlo, chips_per_pod=256)
+        rec["hlo_cost"] = {
+            "dot_flops": hc.dot_flops,
+            "hbm_bytes": hc.hbm_bytes,
+            "collectives": hc.collectives,
+            "collective_ici_bytes": hc.collective_ici_total(),
+            "collective_dcn_bytes": hc.collective_dcn_total(),
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"[reanalyze] refreshed {n} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

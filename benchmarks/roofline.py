@@ -1,0 +1,134 @@
+"""Roofline report from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all in seconds per step, from
+the trip-count-aware HLO analysis (per-device numbers):
+
+  compute    = dot_flops / PEAK_FLOPS           (197 TF/s bf16, v5e)
+  memory     = hbm_bytes / HBM_BW               (819 GB/s)
+  collective = ici_bytes / ICI_BW + dcn_bytes / DCN_BW_PER_CHIP
+               (50 GB/s/link; 25 GB/s/host NIC / 4 chips = 6.25 GB/s/chip)
+
+MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (prefill/decode), D =
+global tokens; the useful-compute ratio MODEL_FLOPS/(HLO dot flops x chips)
+exposes remat/redundancy waste; the roofline fraction
+MODEL_FLOPS/(chips*peak*max_term) is the score a real run could at best hit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW_PER_CHIP = 25e9 / 4
+
+CHIPS = {"single": 256, "multi": 512}
+
+
+def load_cells(outdir: str = "results/dryrun", tag: str = "baseline") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(outdir, f"*__{tag}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(rec: dict) -> Optional[dict]:
+    if rec.get("ok") is not True:
+        return None
+    hc = rec["hlo_cost"]
+    chips = CHIPS[rec["mesh"]]
+    compute = hc["dot_flops"] / PEAK_FLOPS
+    memory = hc["hbm_bytes"] / HBM_BW
+    coll = (
+        hc["collective_ici_bytes"] / ICI_BW
+        + hc["collective_dcn_bytes"] / DCN_BW_PER_CHIP
+    )
+    model_flops = (6 if rec["step_kind"] == "train" else 2) * rec[
+        "active_params"
+    ] * rec["tokens_global"]
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", coll),
+        key=lambda kv: kv[1],
+    )
+    useful = model_flops / max(hc["dot_flops"] * chips, 1.0)
+    frac = model_flops / (chips * PEAK_FLOPS * max(dominant[1], 1e-12))
+    hbm_per_dev = rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["step_kind"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant[0],
+        "model_flops": model_flops,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+        "hbm_per_dev_gb": hbm_per_dev / 1e9,
+        "fits_hbm": hbm_per_dev < 16e9,
+        "dcn_bytes": hc["collective_dcn_bytes"],
+    }
+
+
+ADVICE = {
+    "compute": "reduce recompute (remat policy) / pick a less redundant sharding",
+    "memory": "fuse / microbatch / shrink f32 transients (logits, moe buffers)",
+    "collective": "hierarchical or compressed reduction; keep DCN to 1/k shards",
+}
+
+
+def fmt_row(t: dict) -> str:
+    return (
+        f"| {t['arch']} | {t['shape']} | {t['mesh']} | "
+        f"{t['compute_s']*1e3:.1f} | {t['memory_s']*1e3:.1f} | "
+        f"{t['collective_s']*1e3:.1f} | **{t['dominant']}** | "
+        f"{t['model_flops']:.2e} | {t['useful_ratio']:.2f} | "
+        f"{t['roofline_frac']*100:.1f}% | {t['hbm_per_dev_gb']:.1f} "
+        f"{'ok' if t['fits_hbm'] else '**OVER**'} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) | "
+    "dominant | MODEL_FLOPS | useful | roofline | HBM GB/dev |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def report(outdir: str = "results/dryrun", tag: str = "baseline") -> str:
+    rows = []
+    skipped = []
+    for rec in load_cells(outdir, tag):
+        t = terms(rec)
+        if t is None:
+            skipped.append(f"{rec['arch']} x {rec['shape']} x {rec['mesh']}: "
+                           f"{rec.get('skipped', rec.get('error', '?'))}")
+            continue
+        rows.append(t)
+    rows.sort(key=lambda t: (t["arch"], t["shape"], t["mesh"]))
+    lines = [HEADER] + [fmt_row(t) for t in rows]
+    lines.append("")
+    lines.append("Per-cell advice (dominant-term lever): " + "; ".join(
+        f"**{k}** → {v}" for k, v in ADVICE.items()))
+    if skipped:
+        lines.append("")
+        lines.append("Skipped cells:")
+        lines += [f"- {s}" for s in skipped]
+    return "\n".join(lines)
+
+
+def main():
+    txt = report()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(txt + "\n")
+    print(txt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness: one section per paper table/figure + TPU adaptation +
+roofline summary.  Exits non-zero if a reproduced claim fails.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import paper_models, tpu_planner
+
+    results = {}
+    t0 = time.time()
+    for fn in paper_models.ALL + tpu_planner.ALL:
+        name = fn.__name__
+        try:
+            results[name] = bool(fn())
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            results[name] = False
+        print()
+
+    # roofline summary (from dry-run records, if present)
+    try:
+        from benchmarks import roofline
+
+        cells = roofline.load_cells()
+        if cells:
+            rows = [t for t in (roofline.terms(r) for r in cells) if t]
+            n_fit = sum(t["fits_hbm"] for t in rows)
+            print(f"# roofline: {len(rows)} cells analysed, "
+                  f"{n_fit} fit 16GB HBM; dominant terms: "
+                  + ", ".join(
+                      f"{d}={sum(1 for t in rows if t['dominant'] == d)}"
+                      for d in ("compute", "memory", "collective")))
+            results["roofline_table"] = len(rows) >= 60
+        else:
+            print("# roofline: no dry-run records (run repro.launch.dryrun)")
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline summary failed: {e}")
+
+    print(f"\n== benchmark summary ({time.time()-t0:.1f}s) ==")
+    for name, ok in results.items():
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}")
+    if not all(results.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""TPU-adaptation benchmarks: the paper's machinery on v5e constants.
+
+* strategy crossover table for cross-pod transfers (direct/staged/multirail)
+* gradient all-reduce: flat ring vs pod-hierarchical
+* MoE dispatch planning for the assigned MoE architectures
+* measured microbenchmark fit (host transfers) proving the fit pipeline
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.benchmark import bench_host_device_roundtrip
+from repro.core.planner import plan_moe_alltoall, plan_tpu_allreduce, plan_tpu_crosspod
+from repro.core.topology import TpuPodTopology
+
+
+def crosspod_strategies() -> bool:
+    print("# tpu: cross-pod transfer strategy by (bytes/chip, n_msgs)")
+    topo = TpuPodTopology(pods=2)
+    ok_any_staged = False
+    ok_large_parallel = False
+    for nbytes in (4096.0, 262144.0, float(1 << 24)):
+        for n in (1, 16, 256):
+            plan = plan_tpu_crosspod(topo, nbytes, n)
+            print(f"tpu_crosspod,bytes={int(nbytes)},n={n},best={plan.strategy},"
+                  f"t={plan.predicted_time*1e3:.3f}ms")
+            if plan.strategy in ("staged", "multirail") and n >= 16:
+                ok_any_staged = True
+            if plan.strategy in ("direct", "multirail") and nbytes >= 1 << 24 and n == 1:
+                ok_large_parallel = True
+    return ok_any_staged and ok_large_parallel
+
+
+def allreduce_strategy() -> bool:
+    print("# tpu: gradient all-reduce strategy")
+    topo = TpuPodTopology(pods=2)
+    ok = True
+    for mb in (1, 64, 1024):
+        plan = plan_tpu_allreduce(topo, float(mb) * 2**20)
+        print(f"tpu_allreduce,bytes_per_chip={mb}MiB,best={plan.strategy},"
+              f"speedup_vs_flat={plan.speedup_over('flat_ring'):.2f}x")
+        ok &= plan.strategy == "pod_hierarchical"
+    return ok
+
+
+def moe_dispatch() -> bool:
+    print("# tpu: MoE dispatch planning (paper Alltoall case study)")
+    ok = True
+    for arch in ("dbrx-132b", "mixtral-8x22b"):
+        cfg = get_config(arch)
+        topo = TpuPodTopology(pods=1)
+        plan = plan_moe_alltoall(
+            topo, tokens_per_chip=4096, d_model=cfg.d_model,
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+        )
+        print(f"tpu_moe,{arch},intra_pod_best={plan.strategy},"
+              f"t={plan.predicted_time*1e3:.2f}ms")
+        topo2 = TpuPodTopology(pods=2)
+        plan2 = plan_moe_alltoall(
+            topo2, tokens_per_chip=4096, d_model=cfg.d_model,
+            n_experts=cfg.n_experts, top_k=cfg.top_k, crosses_pod=True,
+        )
+        print(f"tpu_moe,{arch},cross_pod_best={plan2.strategy}")
+        ok &= plan.predicted_time > 0
+    return ok
+
+
+def measured_fit() -> bool:
+    print("# tpu: live microbenchmark -> postal fit (host<->device transfers)")
+    res = bench_host_device_roundtrip(sizes=(1 << 12, 1 << 16, 1 << 20))
+    for row in res.csv_rows("h2d"):
+        print("tpu_fit," + row)
+    return res.fitted.alpha >= 0 and res.fitted.beta >= 0
+
+
+ALL = [crosspod_strategies, allreduce_strategy, moe_dispatch, measured_fit]

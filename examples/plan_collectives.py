@@ -1,0 +1,62 @@
+"""The paper's model-driven planner, interactively: given a communication
+problem, rank every strategy on GPU machines (Summit/Lassen, Tables I-III)
+and on the TPU v5e target.
+
+    PYTHONPATH=src python examples/plan_collectives.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.planner import (
+    CollectiveKind,
+    message_count_crossover,
+    plan_gpu_collective,
+    plan_gpu_messages,
+    plan_moe_alltoall,
+    plan_tpu_allreduce,
+    plan_tpu_crosspod,
+)
+from repro.core.topology import LASSEN, SUMMIT, TpuPodTopology
+
+
+def show(title, plan):
+    print(f"\n{title}")
+    for name, t in plan.alternatives:
+        mark = " <== planner pick" if name == plan.strategy else ""
+        print(f"   {name:22s} {t*1e3:9.3f} ms{mark}")
+
+
+def main():
+    print("=" * 72)
+    print("PAPER MACHINES (measured Tables I-III)")
+    print("=" * 72)
+    show("Summit: 1 x 64KiB message GPU->GPU, different nodes",
+         plan_gpu_messages(SUMMIT, 65536, 1))
+    show("Summit: 32 x 64KiB messages (paper Fig 5 regime)",
+         plan_gpu_messages(SUMMIT, 65536, 32))
+    print(f"\nFig5 crossovers at 1KiB: Summit n*={message_count_crossover(SUMMIT, 1024)}, "
+          f"Lassen n*={message_count_crossover(LASSEN, 1024)}")
+    show("Summit Alltoallv, 32 nodes, 8B per pair (paper Fig 6 small)",
+         plan_gpu_collective(SUMMIT, 32, 8.0, CollectiveKind.ALLTOALLV))
+    show("Summit Alltoallv, 32 nodes, 4MiB per pair (paper Fig 6 large)",
+         plan_gpu_collective(SUMMIT, 32, float(2**22), CollectiveKind.ALLTOALLV))
+
+    print()
+    print("=" * 72)
+    print("TPU v5e TARGET (the adaptation this framework deploys)")
+    print("=" * 72)
+    topo = TpuPodTopology(pods=2)
+    show("cross-pod transfer: 16MiB/chip, 1 message",
+         plan_tpu_crosspod(topo, float(1 << 24), 1))
+    show("cross-pod transfer: 4KiB/chip, 256 messages (latency-bound)",
+         plan_tpu_crosspod(topo, 4096.0, 256))
+    show("gradient all-reduce: 64MiB/chip, 2 pods",
+         plan_tpu_allreduce(topo, float(64 * 2**20)))
+    show("MoE dispatch (dbrx-like): 4096 tok/chip, 16 experts top-4",
+         plan_moe_alltoall(TpuPodTopology(pods=1), 4096, 6144, 16, 4))
+
+
+if __name__ == "__main__":
+    main()

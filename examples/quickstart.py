@@ -1,0 +1,49 @@
+"""Quickstart: build a small model, take training steps, decode a sample.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.configs.base import RunConfig
+from repro.data import SyntheticLM
+from repro.models import decode_step, init_params, prefill
+from repro.models.steps import train_step
+from repro.optim import init_state
+
+
+def main():
+    cfg = smoke_config("llama3.2-1b")
+    run = RunConfig(model=cfg, n_microbatches=1, remat=False, warmup_steps=2,
+                    total_steps=20, learning_rate=3e-3)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_state(params)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    step = jax.jit(lambda p, o, b: train_step(cfg, run, p, o, b))
+
+    print("== training ==")
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, m = step(params, opt, batch)
+        print(f"step {i}: loss {float(m['loss']):.4f}")
+
+    print("== generation ==")
+    prompt = jnp.asarray(data.batch(99)["tokens"][:2, :16])
+    logits, caches = prefill(cfg, params, prompt, capacity=32)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for t in range(16, 24):
+        logits, caches = decode_step(cfg, params, caches, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    print("generated token ids:", jnp.concatenate(out, 1)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving example: prefill a batch of prompts and greedy-decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b --smoke]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or [
+        "--arch", "gemma2-9b", "--smoke", "--batch", "4",
+        "--prompt-len", "16", "--new-tokens", "16",
+    ])

@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model.
+
+Default runs a short smoke (20 steps); pass --steps 300 for the full run
+described in EXPERIMENTS.md (loss drops from ~10.4 to < 6 on the synthetic
+Zipf stream).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ATTN, LayerGroup, RunConfig
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.models.steps import train_step
+from repro.optim import init_state
+from repro.checkpoint import Checkpointer
+from repro.runtime import StragglerMonitor
+
+import time
+
+
+def model_100m():
+    """~100M params: 12L d=768 12H ff=3072 vocab=32768 (llama-style)."""
+    base = get_config("llama3.2-1b")
+    return dataclasses.replace(
+        base,
+        name="llama-100m",
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab_size=32_768,
+        head_dim=64,
+        groups=(LayerGroup(pattern=(ATTN,), count=12),),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default="")
+    args = ap.parse_args(argv)
+
+    cfg = model_100m()
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params/1e6:.0f}M params)")
+    run = RunConfig(model=cfg, n_microbatches=1, remat=False,
+                    warmup_steps=max(args.steps // 10, 1),
+                    total_steps=args.steps, learning_rate=6e-4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_state(params)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       global_batch=args.batch, seed=0)
+    step = jax.jit(lambda p, o, b: train_step(cfg, run, p, o, b))
+    ck = Checkpointer(args.checkpoint_dir) if args.checkpoint_dir else None
+    mon = StragglerMonitor()
+
+    first = last = None
+    for i in range(args.steps):
+        t0 = time.perf_counter()
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, m = step(params, opt, batch)
+        loss = float(m["loss"])
+        mon.record(i, time.perf_counter() - t0)
+        first = first if first is not None else loss
+        last = loss
+        if i % max(args.steps // 20, 1) == 0:
+            tokps = args.batch * args.seq / max(time.perf_counter() - t0, 1e-9)
+            print(f"step {i:4d}  loss {loss:.4f}  lr {float(m['lr']):.2e}  {tokps:,.0f} tok/s")
+        if ck and (i + 1) % 50 == 0:
+            ck.save(i + 1, {"params": params, "opt": opt}, block=False)
+    if ck:
+        ck.wait()
+    print(f"loss: {first:.3f} -> {last:.3f} over {args.steps} steps")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

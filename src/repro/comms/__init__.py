@@ -1,0 +1,25 @@
+"""Mesh collectives with selectable algorithms (strategies).
+
+Every public function takes/returns *global* jax.Arrays and is implemented
+with ``jax.shard_map`` over a named mesh, so each strategy's communication
+pattern is explicit in the lowered HLO (visible to the roofline parser) and
+selectable by ``repro.core.planner`` — the paper's optimization applied to
+the TPU target.
+"""
+from repro.comms.allreduce import (
+    allreduce,
+    allreduce_flat,
+    allreduce_hierarchical,
+    allreduce_ring,
+    reduce_scatter,
+)
+from repro.comms.alltoall import (
+    alltoall,
+    alltoall_direct,
+    alltoall_hierarchical,
+)
+from repro.comms.allgather import all_gather_axis
+from repro.comms.p2p import halo_exchange, ring_shift
+from repro.comms.autotune import select_allreduce_strategy, select_alltoall_strategy
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,106 @@
+"""Model-guided strategy selection for the mesh collectives.
+
+This is where ``repro.core`` (the paper) meets ``repro.comms`` (the
+framework): given the mesh shape and payload, consult the performance models
+and return the strategy string the collective wrappers accept.  An optional
+measured-autotune path benchmarks the candidates live and records which one
+the model would have picked (model-vs-measurement is the paper's validation
+loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.planner import plan_ep_dispatch, plan_tpu_allreduce, plan_tpu_crosspod, Plan
+from repro.core.topology import TpuPodTopology
+
+
+def _topo_from_mesh_shape(mesh_shape: Dict[str, int]) -> TpuPodTopology:
+    pods = mesh_shape.get("pod", 1)
+    inner = 1
+    for name, size in mesh_shape.items():
+        if name != "pod":
+            inner *= size
+    # squarest torus factorization of the per-pod chip count
+    x = int(np.floor(np.sqrt(inner)))
+    while inner % x:
+        x -= 1
+    return TpuPodTopology(pods=pods, torus_x=x, torus_y=inner // x)
+
+
+def select_allreduce_strategy(
+    mesh_shape: Dict[str, int], bytes_per_chip: float
+) -> str:
+    """flat vs hierarchical gradient all-reduce, from the models."""
+    topo = _topo_from_mesh_shape(mesh_shape)
+    if topo.pods == 1:
+        return "flat"  # no slow tier to stage around
+    plan = plan_tpu_allreduce(topo, bytes_per_chip)
+    return {"flat_ring": "flat", "pod_hierarchical": "hierarchical"}[plan.strategy]
+
+
+def select_alltoall_strategy(
+    mesh_shape: Dict[str, int],
+    bytes_per_chip: float,
+    n_msgs: int = 1,
+    crosses_pod: bool = False,
+) -> str:
+    """direct vs hierarchical all-to-all (MoE dispatch), from the models."""
+    if not crosses_pod or mesh_shape.get("pod", 1) == 1:
+        return "direct"
+    topo = _topo_from_mesh_shape(mesh_shape)
+    plan = plan_tpu_crosspod(topo, bytes_per_chip, n_msgs=n_msgs)
+    return {"direct": "direct", "staged": "hierarchical", "multirail": "hierarchical"}[
+        plan.strategy
+    ]
+
+
+def select_moe_dispatch_strategy(
+    mesh_shape: Dict[str, int],
+    ep_axes,
+    bytes_per_bucket: float,
+) -> str:
+    """direct vs hierarchical two-hop dispatch for the MoE a2a, from the
+    postal models.  Single-axis EP is always direct; 2-axis groups follow
+    plan_ep_dispatch (decode payloads -> hierarchical, the paper's
+    small-message staging)."""
+    if len(ep_axes) < 2:
+        return "direct"
+    topo = _topo_from_mesh_shape(mesh_shape)
+    sizes = tuple(mesh_shape[a] for a in ep_axes)
+    plan = plan_ep_dispatch(topo, bytes_per_bucket, sizes)  # type: ignore[arg-type]
+    return plan.strategy
+
+
+@dataclasses.dataclass
+class AutotuneRecord:
+    strategy: str
+    measured: Dict[str, float]
+    model_pick: str
+    agreed: bool
+
+
+def measured_autotune(
+    candidates: Dict[str, Callable[[], None]],
+    model_pick: str,
+    reps: int = 5,
+) -> AutotuneRecord:
+    """Run each candidate, take min-of-reps, pick the fastest; record whether
+    the model agreed (the paper's model-validation loop, §VI)."""
+    measured: Dict[str, float] = {}
+    for name, fn in candidates.items():
+        fn()  # warmup / compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        measured[name] = best
+    pick = min(measured, key=measured.get)
+    return AutotuneRecord(
+        strategy=pick, measured=measured, model_pick=model_pick, agreed=pick == model_pick
+    )

@@ -1,0 +1,101 @@
+"""Architecture registry: one exact config per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``smoke_config(name)``
+returns a reduced same-family config for CPU smoke tests (small dims, same
+layer pattern / routing / softcaps so every code path is exercised).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import (
+    ATTN,
+    ATTNX,
+    LOCAL,
+    LayerGroup,
+    ModelConfig,
+    RGLRU,
+    RunConfig,
+    RWKV,
+    SHAPES,
+    ShapeConfig,
+    XATTN,
+)
+
+from repro.configs.dbrx_132b import CONFIG as DBRX_132B
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.gemma2_9b import CONFIG as GEMMA2_9B
+from repro.configs.llama3_2_1b import CONFIG as LLAMA3_2_1B
+from repro.configs.codeqwen1_5_7b import CONFIG as CODEQWEN1_5_7B
+from repro.configs.olmo_1b import CONFIG as OLMO_1B
+from repro.configs.rwkv6_1_6b import CONFIG as RWKV6_1_6B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.recurrentgemma_9b import CONFIG as RECURRENTGEMMA_9B
+from repro.configs.llama3_2_vision_11b import CONFIG as LLAMA3_2_VISION_11B
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        DBRX_132B,
+        MIXTRAL_8X22B,
+        GEMMA2_9B,
+        LLAMA3_2_1B,
+        CODEQWEN1_5_7B,
+        OLMO_1B,
+        RWKV6_1_6B,
+        WHISPER_SMALL,
+        RECURRENTGEMMA_9B,
+        LLAMA3_2_VISION_11B,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config: tiny dims, identical layer pattern."""
+    cfg = get_config(name)
+    groups = tuple(
+        LayerGroup(pattern=g.pattern, count=min(g.count, 2)) for g in cfg.groups
+    )
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=256,
+        head_dim=32,
+        vocab_size=512,
+        groups=groups,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        window=min(cfg.window, 32) if cfg.window else 0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        frontend_tokens=min(cfg.frontend_tokens, 24) if cfg.frontend_tokens else 0,
+        frontend_dim=64 if cfg.frontend_dim else 0,
+        lru_width=128 if cfg.lru_width else 0,
+    )
+
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "smoke_config",
+    "ModelConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "LayerGroup",
+    "ATTN",
+    "ATTNX",
+    "LOCAL",
+    "XATTN",
+    "RWKV",
+    "RGLRU",
+]

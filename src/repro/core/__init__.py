@@ -1,0 +1,66 @@
+"""The paper's primary contribution: data-movement performance models and
+the model-driven communication planner.
+
+Layers:
+  params    — measured constants (paper Tables I-III) + TPU v5e target specs
+  postal    — Eq. (1): segmented postal models
+  maxrate   — Eq. (2)/(3): injection caps & multi-message costs
+  topology  — Summit/Lassen nodes and TPU pod tori
+  paths     — GPUDirect vs 3-step; TPU direct/staged/multirail paths
+  fitting   — least-squares (re)fitting of all model parameters
+  simulate  — collective strategy cost simulation (paper §VI)
+  planner   — strategy selection consumed by repro.comms
+  benchmark — live measurement harness feeding `fitting`
+"""
+from repro.core.params import (
+    CopyDirection,
+    Locality,
+    PostalParams,
+    Protocol,
+    TABLE_I,
+    TABLE_II,
+    TABLE_III_BETA_N,
+    TPU_V5E,
+    TpuSystem,
+)
+from repro.core.postal import (
+    SegmentedPostalModel,
+    SimplePostalModel,
+    crossover_size,
+    make_simple,
+    paper_model,
+)
+from repro.core.maxrate import (
+    MaxRateParams,
+    maxrate_time,
+    multi_message_time,
+    node_split_time,
+    saturating_ppn,
+)
+from repro.core.topology import (
+    GpuNodeTopology,
+    LASSEN,
+    SINGLE_POD_V5E,
+    SUMMIT,
+    TWO_POD_V5E,
+    TpuPodTopology,
+)
+from repro.core.paths import (
+    TpuPathModels,
+    gpudirect_time,
+    memcpy_time,
+    three_step_time,
+)
+from repro.core.planner import (
+    CollectiveKind,
+    Plan,
+    message_count_crossover,
+    plan_gpu_collective,
+    plan_gpu_messages,
+    plan_moe_alltoall,
+    plan_tpu_allreduce,
+    plan_tpu_crosspod,
+)
+from repro.core import fitting, simulate, benchmark
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,113 @@
+"""Live microbenchmarks + model fitting (the paper's measurement pipeline).
+
+On real TPU/GPU hardware these functions measure the actual transport tiers;
+in this container they exercise the identical code path against host-level
+transfers (device_put round-trips and jitted collectives on CPU devices), so
+the fit -> model -> plan pipeline is tested end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fitting import fit_postal
+from repro.core.params import PostalParams
+
+
+def _time_call(fn: Callable[[], None], min_time: float = 2e-3, max_reps: int = 200) -> float:
+    """Paper §VI methodology: repeat until timer precision, min over trials."""
+    trials = []
+    for _ in range(3):
+        # calibrate rep count
+        t0 = time.perf_counter()
+        fn()
+        once = max(time.perf_counter() - t0, 1e-9)
+        reps = int(min(max(min_time / once, 1), max_reps))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        trials.append((time.perf_counter() - t0) / reps)
+    return min(trials)
+
+
+@dataclasses.dataclass
+class BenchResult:
+    sizes: List[int]
+    times: List[float]
+    fitted: PostalParams
+
+    def csv_rows(self, name: str) -> List[str]:
+        rows = [f"{name},{s},{t:.3e}" for s, t in zip(self.sizes, self.times)]
+        rows.append(f"{name}_fit,alpha={self.fitted.alpha:.3e},beta={self.fitted.beta:.3e}")
+        return rows
+
+
+def bench_transfer(
+    make_buffer: Callable[[int], object],
+    transfer: Callable[[object], object],
+    sizes: Sequence[int] = (1 << 10, 1 << 13, 1 << 16, 1 << 19, 1 << 22, 1 << 24),
+) -> BenchResult:
+    """Measure transfer(buffer_of_size) for each size and fit a postal model."""
+    measured: List[float] = []
+    szs: List[int] = []
+    for s in sizes:
+        buf = make_buffer(s)
+        t = _time_call(lambda: transfer(buf))
+        measured.append(t)
+        szs.append(s)
+    return BenchResult(sizes=szs, times=measured, fitted=fit_postal(szs, measured))
+
+
+def bench_host_device_roundtrip(sizes: Sequence[int] = (1 << 12, 1 << 16, 1 << 20, 1 << 23)) -> BenchResult:
+    """cudaMemcpyAsync analogue: host numpy -> jax device buffer."""
+    import jax
+
+    def make(s: int):
+        return np.zeros(s, np.uint8)
+
+    def put(buf):
+        jax.device_put(buf).block_until_ready()
+
+    return bench_transfer(make, put, sizes)
+
+
+def bench_jitted_allreduce(
+    n_devices: int, sizes: Sequence[int] = (1 << 12, 1 << 16, 1 << 20)
+) -> Dict[str, BenchResult]:
+    """Time flat psum vs hierarchical reduce on an n_devices CPU mesh.
+
+    Requires the process to have been started with
+    XLA_FLAGS=--xla_force_host_platform_device_count=<n_devices>.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    devs = jax.devices()
+    if len(devs) < n_devices:
+        raise RuntimeError(f"need {n_devices} devices, have {len(devs)}")
+    mesh = Mesh(np.asarray(devs[:n_devices]).reshape(n_devices), ("x",))
+
+    results: Dict[str, BenchResult] = {}
+
+    def run(sum_fn, name):
+        def make(s: int):
+            arr = jnp.zeros((n_devices, max(s // 4, 1)), jnp.float32)
+            return jax.device_put(arr, NamedSharding(mesh, P("x", None)))
+
+        def go(buf):
+            sum_fn(buf).block_until_ready()
+
+        results[name] = bench_transfer(make, go, sizes)
+
+    @jax.jit
+    def psum_all(x):
+        return jax.shard_map(
+            lambda v: jax.lax.psum(v, "x"), mesh=mesh, in_specs=P("x", None), out_specs=P(None, None)
+        )(x)
+
+    run(psum_all, "allreduce_flat")
+    return results

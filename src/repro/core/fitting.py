@@ -1,0 +1,134 @@
+"""Fitting postal / max-rate models from (size, time) measurements.
+
+The paper fits alpha/beta per protocol segment by linear least squares on
+ping-pong measurements.  We reproduce that machinery so the planner can be
+re-parameterized from live microbenchmarks (``core/benchmark.py``) on any
+machine, and validate it by round-tripping the paper's own constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.params import PostalParams, Protocol
+from repro.core.postal import SegmentedPostalModel
+
+
+def fit_postal(sizes: Sequence[float], times: Sequence[float]) -> PostalParams:
+    """Least-squares fit of T = alpha + beta*s.  alpha clamped to >= 0."""
+    s = np.asarray(sizes, np.float64)
+    t = np.asarray(times, np.float64)
+    if s.size == 0:
+        raise ValueError("no samples")
+    if s.size == 1:
+        return PostalParams(alpha=float(t[0]), beta=0.0)
+    A = np.stack([np.ones_like(s), s], axis=1)
+    # Weight small messages up so alpha is determined by the latency regime
+    # rather than swamped by large-size residuals (paper fits per segment,
+    # segments are narrow; weighting keeps the fit stable across a segment).
+    w = 1.0 / np.maximum(t, 1e-12)
+    Aw = A * w[:, None]
+    tw = t * w
+    coef, *_ = np.linalg.lstsq(Aw, tw, rcond=None)
+    alpha, beta = float(coef[0]), float(coef[1])
+    return PostalParams(alpha=max(alpha, 0.0), beta=max(beta, 0.0))
+
+
+def fit_segmented(
+    sizes: Sequence[float],
+    times: Sequence[float],
+    short_max: float,
+    eager_max: float,
+) -> SegmentedPostalModel:
+    """Fit one postal segment per protocol window."""
+    s = np.asarray(sizes, np.float64)
+    t = np.asarray(times, np.float64)
+    segs = {}
+    masks = {
+        Protocol.SHORT: s <= short_max,
+        Protocol.EAGER: (s > short_max) & (s <= eager_max),
+        Protocol.REND: s > eager_max,
+    }
+    fallback = fit_postal(s, t)
+    for proto, mask in masks.items():
+        segs[proto] = fit_postal(s[mask], t[mask]) if mask.any() else fallback
+    return SegmentedPostalModel(segments=segs, short_max=short_max, eager_max=eager_max)
+
+
+def detect_breakpoints(
+    sizes: Sequence[float], times: Sequence[float], n_break: int = 2
+) -> Tuple[float, ...]:
+    """Locate protocol switch points as the sizes with the largest jump in
+    local per-byte cost (discrete second difference of T on log-size grid).
+
+    Used when fitting a machine whose eager/rendezvous thresholds are unknown.
+    """
+    s = np.asarray(sizes, np.float64)
+    t = np.asarray(times, np.float64)
+    order = np.argsort(s)
+    s, t = s[order], t[order]
+    if s.size < 4:
+        return tuple()
+    # local slope between consecutive samples
+    slope = np.diff(t) / np.maximum(np.diff(s), 1e-30)
+    jump = np.abs(np.diff(np.log(np.maximum(t[1:], 1e-30))))
+    idx = np.argsort(jump)[::-1][:n_break]
+    return tuple(sorted(float(s[i + 1]) for i in idx))
+
+
+def fit_maxrate_beta_N(
+    ppn_values: Sequence[int],
+    times: Sequence[float],
+    nbytes: float,
+    beta_p: float,
+    alpha: float,
+) -> float:
+    """Recover the injection cap beta_N from times at increasing ppn.
+
+    In the capped regime T ~= alpha + ppn*beta_N*s, so beta_N is the slope of
+    (T - alpha) / s against ppn over the saturated points.
+    """
+    ppn = np.asarray(ppn_values, np.float64)
+    t = np.asarray(times, np.float64)
+    y = (t - alpha) / nbytes
+    # Saturated points: those where the observed per-byte cost exceeds beta_p.
+    sat = y > beta_p * 1.05
+    if sat.sum() < 2:
+        # cap never reached (paper: Lassen inter-GPU)
+        return float("nan")
+    coef, *_ = np.linalg.lstsq(ppn[sat][:, None], y[sat], rcond=None)
+    return float(coef[0])
+
+
+@dataclasses.dataclass
+class FitReport:
+    params: Mapping[str, PostalParams]
+    max_rel_err: float
+
+    def __str__(self) -> str:
+        rows = [f"  {k}: alpha={p.alpha:.3e}s beta={p.beta:.3e}s/B" for k, p in self.params.items()]
+        return "\n".join(rows + [f"  max_rel_err={self.max_rel_err:.3f}"])
+
+
+def round_trip_check(model: SegmentedPostalModel, n: int = 64, noise: float = 0.0, seed: int = 0):
+    """Generate samples from a model (+ multiplicative noise) and re-fit.
+
+    Returns (fitted_model, max relative parameter error over segments).
+    """
+    rng = np.random.default_rng(seed)
+    sizes = np.unique(np.logspace(0, 8, n).astype(np.int64)).astype(np.float64)
+    times = np.asarray(model.time(sizes))
+    if noise:
+        times = times * (1.0 + noise * rng.standard_normal(times.shape))
+    fitted = fit_segmented(sizes, times, model.short_max, model.eager_max)
+    errs = []
+    for proto in Protocol:
+        a0, b0 = model.segments[proto].alpha, model.segments[proto].beta
+        a1, b1 = fitted.segments[proto].alpha, fitted.segments[proto].beta
+        if a0 > 0:
+            errs.append(abs(a1 - a0) / a0)
+        if b0 > 0:
+            errs.append(abs(b1 - b0) / b0)
+    return fitted, float(max(errs)) if errs else 0.0

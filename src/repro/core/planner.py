@@ -1,0 +1,179 @@
+"""Model-driven communication planner — the paper's optimization, as an API.
+
+Given a logical collective (kind, payload, message structure) and a topology,
+the planner evaluates every implementable strategy with the performance
+models and returns a ranked plan.  ``comms/`` consumes the decision to pick
+a shard_map lowering; the GPU-machine path reproduces the paper's §V/§VI
+decisions (3-step vs GPUDirect crossovers) exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import simulate
+from repro.core.params import Locality
+from repro.core.paths import gpudirect_time, three_step_time, TpuPathModels
+from repro.core.topology import GpuNodeTopology, TpuPodTopology
+
+
+class CollectiveKind(enum.Enum):
+    P2P = "p2p"  # point-to-point message batch
+    ALLTOALL = "alltoall"
+    ALLTOALLV = "alltoallv"
+    ALLREDUCE = "allreduce"
+    ALLGATHER = "allgather"
+    REDUCESCATTER = "reducescatter"
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    strategy: str
+    predicted_time: float
+    alternatives: Tuple[Tuple[str, float], ...]  # (strategy, time) sorted asc
+
+    @property
+    def ranking(self) -> List[str]:
+        return [name for name, _ in self.alternatives]
+
+    def speedup_over(self, strategy: str) -> float:
+        costs = dict(self.alternatives)
+        return costs[strategy] / self.predicted_time
+
+
+def _mk_plan(costs: Dict[str, float]) -> Plan:
+    ranked = tuple(sorted(costs.items(), key=lambda kv: kv[1]))
+    return Plan(strategy=ranked[0][0], predicted_time=ranked[0][1], alternatives=ranked)
+
+
+# --------------------------------------------------------------------------
+# Paper machines: GPUDirect vs 3-step (single core / all cores).
+# --------------------------------------------------------------------------
+
+def plan_gpu_messages(
+    topo: GpuNodeTopology,
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    locality: Locality = Locality.OFF_NODE,
+    dedup_factor: float = 1.0,
+) -> Plan:
+    """Choose the path for n messages of s bytes from one GPU (paper §V)."""
+    m = topo.machine
+    g = topo.gpus_per_node
+    costs = {
+        "gpudirect": float(gpudirect_time(m, nbytes_per_msg, n_msgs, g, locality)),
+        "three_step_1core": float(
+            three_step_time(m, nbytes_per_msg, n_msgs, 1, g, locality=locality, dedup_factor=dedup_factor)
+        ),
+        "three_step_allcores": float(
+            three_step_time(
+                m, nbytes_per_msg, n_msgs, topo.cores_per_gpu, g, locality=locality, dedup_factor=dedup_factor
+            )
+        ),
+    }
+    return _mk_plan(costs)
+
+
+def message_count_crossover(
+    topo: GpuNodeTopology,
+    nbytes_per_msg: float,
+    max_msgs: int = 1024,
+    cores_per_gpu: int = 1,
+) -> Optional[int]:
+    """Smallest message count at which the 3-step path beats GPUDirect
+    (paper Fig 5: ~10 on Summit, ~100 on Lassen)."""
+    m = topo.machine
+    g = topo.gpus_per_node
+    for n in range(1, max_msgs + 1):
+        direct = float(gpudirect_time(m, nbytes_per_msg, n, g))
+        staged = float(three_step_time(m, nbytes_per_msg, n, cores_per_gpu, g))
+        if staged < direct:
+            return n
+    return None
+
+
+def plan_gpu_collective(
+    topo: GpuNodeTopology, nodes: int, msg_bytes: float, kind: CollectiveKind
+) -> Plan:
+    p = simulate.CollectiveProblem(
+        topo=topo,
+        nodes=nodes,
+        msg_bytes=msg_bytes,
+        split_messages=(kind == CollectiveKind.ALLTOALLV),
+    )
+    return _mk_plan(simulate.simulate_all(p))
+
+
+# --------------------------------------------------------------------------
+# TPU: cross-pod strategy for mesh collectives.
+# --------------------------------------------------------------------------
+
+def plan_tpu_crosspod(
+    topo: TpuPodTopology, bytes_per_chip: float, n_msgs: int = 1
+) -> Plan:
+    p = simulate.TpuCollectiveProblem(topo=topo, bytes_per_chip=bytes_per_chip, n_msgs=n_msgs)
+    return _mk_plan(simulate.tpu_strategy_costs(p))
+
+
+def plan_tpu_allreduce(topo: TpuPodTopology, bytes_per_chip: float) -> Plan:
+    """Gradient all-reduce: flat ring over all chips vs pod-hierarchical."""
+    sys = topo.system
+    flat_axis = topo.total_chips
+    flat = simulate.ring_allreduce_time(topo, bytes_per_chip, flat_axis)
+    if topo.pods > 1:
+        # flat ring crossing DCN pays DCN beta on the slowest links: model the
+        # cross-pod steps at DCN rate for 2*(pods) of the steps.
+        models = TpuPathModels(topo)
+        shard = bytes_per_chip / flat_axis
+        flat += 2 * topo.pods * float(
+            np.asarray(models.tpu_direct_time(shard, 1))
+        )
+    hier = simulate.hierarchical_allreduce_time(topo, bytes_per_chip)
+    return _mk_plan({"flat_ring": flat, "pod_hierarchical": hier})
+
+
+def plan_ep_dispatch(
+    topo: TpuPodTopology,
+    bytes_per_bucket: float,
+    group_sizes: Tuple[int, int],
+) -> Plan:
+    """Direct vs two-hop hierarchical all-to-all over a 2-axis EP group
+    (serving layout).  Postal terms on ICI: direct sends P-1 messages per
+    rank; two-hop sends (inner-1) + (outer-1) messages, each hop moving the
+    full payload once — the paper's message-count-vs-volume trade (§V/§VI)
+    at decode payload sizes."""
+    sys = topo.system
+    outer, inner = group_sizes
+    P_total = outer * inner
+    s_total = bytes_per_bucket * P_total
+    direct = (P_total - 1) * sys.ici_alpha + s_total * sys.ici_beta / sys.ici_links_per_chip
+    hier = (inner - 1 + outer - 1) * sys.ici_alpha + 2 * s_total * sys.ici_beta / sys.ici_links_per_chip
+    return _mk_plan({"direct": direct, "hierarchical": hier})
+
+
+def plan_moe_alltoall(
+    topo: TpuPodTopology,
+    tokens_per_chip: int,
+    d_model: int,
+    n_experts: int,
+    top_k: int,
+    bytes_per_elt: int = 2,
+    expert_axis: str = "model",
+    crosses_pod: bool = False,
+) -> Plan:
+    """Expert-parallel dispatch all-to-all — the paper's Alltoall case study
+    on the TPU target.  Payload per chip = tokens * top_k * d_model bytes,
+    spread over n_experts peer buckets (n_msgs ~ experts)."""
+    payload = tokens_per_chip * top_k * d_model * bytes_per_elt
+    if not crosses_pod:
+        # intra-pod: direct a2a over ICI vs gathered (staged) — direct is the
+        # baseline; staged only models the (rare) tiny-payload latency win.
+        models = TpuPathModels(topo)
+        direct = float(np.asarray(models.ici_time(payload, hops=topo.torus_x // 2, links=topo.system.ici_links_per_chip))) + topo.system.ici_alpha * (n_experts - 1)
+        onehop = float(np.asarray(models.ici_time(payload, hops=1, links=topo.system.ici_links_per_chip))) + topo.system.ici_alpha * int(math.log2(max(n_experts, 2)))
+        return _mk_plan({"direct_a2a": direct, "tree_a2a": onehop})
+    return plan_tpu_crosspod(topo, payload, n_msgs=n_experts)

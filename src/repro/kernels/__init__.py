@@ -1,0 +1,3 @@
+from repro.kernels.config import interpret_mode, pallas_enabled, use_pallas
+
+__all__ = ["interpret_mode", "pallas_enabled", "use_pallas"]

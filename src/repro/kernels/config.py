@@ -1,0 +1,23 @@
+"""Kernel dispatch switch.
+
+``use_pallas(True)`` routes model hot-spots (attention, WKV6, RG-LRU scan)
+through the Pallas TPU kernels; default False keeps the pure-XLA path (the
+one the dry-run lowers — TPU-kernel HLO must not block the CPU compile).
+On CPU backends the kernels run in interpret mode automatically (tests).
+"""
+import jax
+
+_USE_PALLAS = False
+
+
+def use_pallas(on: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = on
+
+
+def pallas_enabled() -> bool:
+    return _USE_PALLAS
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() == "cpu"

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout contract (ops.py transposes from the model's (B, S, H, dh)):
+  q: (B, H, Sq, dh)    k, v: (B, G, Sk, dh)    GQA: H = G * rep.
+Returns (B, H, Sq, dh).  Softmax in f32; causal and sliding-window masks on
+absolute positions (q_offset supports decode/queries not starting at 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, H, Sq, dh = q.shape
+    G = k.shape[1]
+    rep = H // G
+    qg = q.reshape(B, G, rep, Sq, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bgrsd,bgtd->bgrst", qg, kf) * (dh**-0.5)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[2])
+    ok = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,bgtd->bgrsd", probs, vf)
+    return out.reshape(B, H, Sq, dh).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.rglru.kernel import rglru_scan
+from repro.kernels.rglru.ops import scan
+from repro.kernels.rglru.ref import rglru_ref

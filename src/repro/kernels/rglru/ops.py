@@ -1,0 +1,16 @@
+"""Jit-ready RG-LRU scan wrapper: Pallas kernel or scan oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.config import interpret_mode
+from repro.kernels.rglru.kernel import rglru_scan
+from repro.kernels.rglru.ref import rglru_ref
+
+
+def scan(a, b, *, chunk: int = 128, block_w: int = 128, use_kernel: bool = True):
+    B, S, W = a.shape
+    ck, bw = min(chunk, S), min(block_w, W)
+    if use_kernel and S % ck == 0 and W % bw == 0:
+        return rglru_scan(a, b, chunk=ck, block_w=bw, interpret=interpret_mode())
+    return rglru_ref(a, b)[0]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RG-LRU scan: h_t = a_t * h_{t-1} + b_t (diag)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(
+    a: jax.Array,  # (B, S, W) decay in (0, 1]
+    b: jax.Array,  # (B, S, W) gated input
+    h0: Optional[jax.Array] = None,  # (B, W)
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, W = a.shape
+    h = h0 if h0 is not None else jnp.zeros((B, W), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at.astype(jnp.float32) * h + bt.astype(jnp.float32)
+        return h, h
+
+    h_fin, hs = jax.lax.scan(step, h, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_fin

@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6.kernel import wkv6
+from repro.kernels.rwkv6.ops import wkv
+from repro.kernels.rwkv6.ref import wkv6_ref

@@ -1,0 +1,15 @@
+"""Jit-ready WKV6 wrapper: Pallas kernel or recurrence oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.config import interpret_mode
+from repro.kernels.rwkv6.kernel import wkv6
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def wkv(r, k, v, log_w, u, *, chunk: int = 32, use_kernel: bool = True):
+    S = r.shape[1]
+    if use_kernel and S % min(chunk, S) == 0:
+        return wkv6(r, k, v, log_w, u, chunk=chunk, interpret=interpret_mode())
+    return wkv6_ref(r, k, v, log_w, u)

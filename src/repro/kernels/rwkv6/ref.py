@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the WKV6 kernel: the exact token-by-token recurrence.
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+r, k, v, log_w: (B, S, H, K);  u: (H, K);  state: (B, H, K, V).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_w: jax.Array,
+    u: jax.Array,
+    state0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, K = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    s0 = state0 if state0 is not None else jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S_state, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S_state + u[None, :, :, None] * kv)
+        return wt[..., None] * S_state + kv, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_fin

@@ -1,0 +1,5 @@
+# NOTE: repro.launch.dryrun must be imported/run as __main__ FIRST if 512
+# virtual devices are needed — it sets XLA_FLAGS before importing jax.
+from repro.launch.mesh import dp_axes_of, make_mesh, make_production_mesh
+
+__all__ = ["dp_axes_of", "make_mesh", "make_production_mesh"]

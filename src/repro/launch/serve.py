@@ -1,0 +1,94 @@
+"""Serving driver: batched prefill + greedy decode.
+
+Demonstrates the inference path the decode_* dry-run shapes lower: one
+prefill building per-layer caches, then a jitted single-token decode step
+iterated with the KV/recurrent caches donated in place.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.launch.mesh import dp_axes_of, make_mesh
+from repro.launch.train import build_mesh
+from repro.models import decode as dec
+from repro.models import init_params
+from repro.models.transformer import DistContext
+from repro.sharding import specs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--mesh-shape", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mesh = build_mesh(args.mesh_shape)
+    tp = mesh.shape.get("model", 1)
+    cfg0 = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg, ep_shards = specs.tp_adapt(cfg0, tp)
+    dist = (
+        DistContext(mesh=mesh, dp_axes=dp_axes_of(mesh) or ("data",), ep_shards=ep_shards)
+        if int(np.prod(list(mesh.shape.values()))) > 1
+        else None
+    )
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed), ep_shards=ep_shards)
+    B, P_len, N = args.batch, args.prompt_len, args.new_tokens
+    capacity = P_len + N
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(2, cfg.vocab_size, size=(B, P_len), dtype=np.int32)
+    frontend = None
+    if cfg.frontend_tokens:
+        fd = cfg.frontend_dim or cfg.d_model
+        frontend = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_tokens, fd), dtype=np.float32),
+            jnp.bfloat16,
+        )
+
+    t0 = time.perf_counter()
+    prefill_fn = jax.jit(
+        functools.partial(dec.prefill, cfg, capacity=capacity, dist=dist),
+        static_argnames=(),
+    )
+    logits, caches = prefill_fn(params, jnp.asarray(prompts), frontend=frontend)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    print(f"[serve] prefill {B}x{P_len} in {t_prefill:.2f}s "
+          f"({B * P_len / t_prefill:.0f} tok/s)")
+
+    decode_fn = jax.jit(
+        functools.partial(dec.decode_step, cfg, dist=dist),
+        donate_argnums=(1,),
+    )
+    out_tokens = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    for i in range(N):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, caches = decode_fn(params, caches, tok, jnp.int32(P_len + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(logits)
+    t_dec = time.perf_counter() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[serve] decoded {N} tokens x {B} seqs in {t_dec:.2f}s "
+          f"({B * N / t_dec:.1f} tok/s)")
+    print("[serve] sample generations (first 3 rows):")
+    for row in gen[:3]:
+        print("   ", row[:16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Model library: 10 architectures from one composable layer-group engine."""
+from repro.models.transformer import DistContext, forward, init_params
+from repro.models.decode import decode_step, init_caches, prefill
+from repro.models.steps import next_token_loss, train_step
+
+__all__ = [
+    "DistContext",
+    "forward",
+    "init_params",
+    "decode_step",
+    "init_caches",
+    "prefill",
+    "next_token_loss",
+    "train_step",
+]

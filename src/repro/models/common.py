@@ -1,0 +1,165 @@
+"""Shared building blocks: norms, activations, RoPE, init, MLP."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Norms.  All norms compute in f32 and cast back (TPU-standard).
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6, plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        s = scale.astype(jnp.float32)
+        y = y * (1.0 + s) if plus_one else y * s
+    return y.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: Optional[jax.Array], bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, p: Optional[dict]) -> jax.Array:
+    """Dispatch on cfg.norm.  ``p`` holds {'scale': ..., 'bias': ...} or is
+    None for non-parametric LN (olmo)."""
+    if cfg.norm == "rmsnorm":
+        plus_one = "gemma" in cfg.name  # gemma-family (1+scale) rmsnorm
+        return rmsnorm(x, None if p is None else p.get("scale"), plus_one=plus_one)
+    if cfg.norm == "layernorm":
+        return layernorm(
+            x,
+            None if p is None else p.get("scale"),
+            None if p is None else p.get("bias"),
+        )
+    if cfg.norm == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+def norm_params(cfg: ModelConfig, rng: jax.Array, shape_d: int):
+    if cfg.norm == "nonparam_ln":
+        return None
+    if cfg.norm == "rmsnorm":
+        init = jnp.zeros if "gemma" in cfg.name else jnp.ones  # (1+s) form -> 0
+        return {"scale": init((shape_d,), dtype_of(cfg))}
+    return {
+        "scale": jnp.ones((shape_d,), dtype_of(cfg)),
+        "bias": jnp.zeros((shape_d,), dtype_of(cfg)),
+    }
+
+
+# --------------------------------------------------------------------------
+# Activations / softcap.
+# --------------------------------------------------------------------------
+
+def activation(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(cfg.act)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Init / dense / MLP.
+# --------------------------------------------------------------------------
+
+def dense_init(rng: jax.Array, shape: Tuple[int, ...], dtype, fan_in: Optional[int] = None) -> jax.Array:
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fan, 1))
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def mlp_params(cfg: ModelConfig, rng: jax.Array) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(rng)
+    w_in_cols = 2 * ff if cfg.gated else ff
+    return {
+        "w_in": dense_init(k1, (d, w_in_cols), dt, fan_in=d),
+        "w_out": dense_init(k2, (ff, d), dt, fan_in=ff),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["w_in"]
+    if cfg.gated:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = activation(cfg, gate) * up
+    else:
+        h = activation(cfg, h)
+    return h @ p["w_out"]
+
+
+def embed_params(cfg: ModelConfig, rng: jax.Array) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(rng)
+    p = {"tok": dense_init(k1, (cfg.vocab_padded, cfg.d_model), dt, fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab_padded), dt, fan_in=cfg.d_model)
+    if cfg.pos == "learned":
+        k3 = jax.random.fold_in(rng, 3)
+        # sized generously so any dry-run shape fits (learned positions are a
+        # whisper stub concession; see DESIGN.md)
+        p["pos"] = dense_init(k3, (65536, cfg.d_model), dt, fan_in=cfg.d_model)
+    return p
+
+
+def unembed(cfg: ModelConfig, embed: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ embed["tok"].T
+    else:
+        logits = x @ embed["head"]
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits

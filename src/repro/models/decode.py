@@ -1,0 +1,302 @@
+"""Serving entry points: cache init, prefill, and single-token decode.
+
+Caches mirror the parameter structure — one pytree per layer group with
+leaves stacked over the group's ``count`` so the decode step scans layers
+with ``lax.scan(body, x, (param_stack, cache_stack))``.
+
+Cache contents by layer kind:
+  ATTN   — global KV cache, capacity = max sequence length.
+  LOCAL  — ring-buffer KV cache, capacity = window (O(1) in context length:
+           this is what makes ``long_500k`` run for SWA / hybrid archs).
+  XATTN  — precomputed cross K/V over frontend embeddings.
+  ATTNX  — self KV cache + cross K/V (whisper decoder).
+  RWKV   — WKV state (B,H,K,V) + token-shift states (O(1)).
+  RGLRU  — recurrence state (B,W) + conv tail (O(1)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    ATTNX,
+    LOCAL,
+    ModelConfig,
+    RGLRU,
+    RWKV,
+    XATTN,
+)
+from repro.models import attention as attn
+from repro.models import griffin, moe, rwkv
+from repro.models.common import apply_norm, dtype_of, mlp_apply, unembed
+from repro.models.transformer import (
+    DistContext,
+    _constrain,
+    _dp_spec,
+    _embed_tokens,
+    _moe_call,
+    _positions_embed,
+    _run_encoder,
+)
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Cache init.
+# --------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int) -> dict:
+    G, dh = cfg.n_kv_heads, cfg.head_dim_
+    T = max(cfg.frontend_tokens, 1)
+    dt = dtype_of(cfg)
+    if kind == ATTN:
+        return attn.init_kv_cache(cfg, batch, capacity)
+    if kind == LOCAL:
+        return attn.init_kv_cache(cfg, batch, attn.cache_capacity(cfg.window, capacity))
+    if kind == XATTN:
+        return {
+            "ck": jnp.zeros((batch, T, G, dh), dt),
+            "cv": jnp.zeros((batch, T, G, dh), dt),
+        }
+    if kind == ATTNX:
+        return {
+            "kv": attn.init_kv_cache(cfg, batch, capacity),
+            "ck": jnp.zeros((batch, T, G, dh), dt),
+            "cv": jnp.zeros((batch, T, G, dh), dt),
+        }
+    if kind == RWKV:
+        return rwkv.init_rwkv_cache(cfg, batch)
+    if kind == RGLRU:
+        return griffin.init_rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int):
+    """Zero caches for every group, stacked over the group's count."""
+    groups = []
+    for g in cfg.groups:
+        single = tuple(_layer_cache(cfg, kind, batch, capacity) for kind in g.pattern)
+        stacked = jax.tree.map(
+            lambda a: jnp.tile(a, (g.count,) + (1,) * a.ndim), single
+        )
+        groups.append(stacked)
+    return tuple(groups)
+
+
+# --------------------------------------------------------------------------
+# Prefill: full forward that also builds caches.
+# --------------------------------------------------------------------------
+
+def _prefill_layer(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    enc: Optional[jax.Array],
+    capacity: int,
+    dist: Optional[DistContext],
+) -> Tuple[jax.Array, dict]:
+    if kind in (ATTN, LOCAL):
+        window = cfg.window if kind == LOCAL else 0
+        h = apply_norm(cfg, x, p["ln1"])
+        q, k, v = attn.qkv_proj(cfg, p["attn"], h, positions)
+        cap = capacity if kind == ATTN else attn.cache_capacity(cfg.window, capacity)
+        cache = attn.cache_from_kv(k, v, positions, cap)
+        o = attn.attend(cfg, q, k, v, positions, positions, window=window)
+        a = attn.out_proj(p["attn"], o)
+        if cfg.post_norms:
+            a = apply_norm(cfg, a, p["post_ln1"])
+        x = x + a
+        h = apply_norm(cfg, x, p["ln2"])
+        if cfg.is_moe:
+            m, _ = _moe_call(cfg, p["moe"], h, dist)
+        else:
+            m = mlp_apply(cfg, p["mlp"], h)
+        if cfg.post_norms:
+            m = apply_norm(cfg, m, p["post_ln2"])
+        return x + m, cache
+    if kind == XATTN:
+        ck, cv = attn.cross_kv(cfg, p["xattn"], enc)
+        h = apply_norm(cfg, x, p["ln1"])
+        a = attn.cross_attention(cfg, p["xattn"], h, (ck, cv))
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * mlp_apply(cfg, p["mlp"], h)
+        return x, {"ck": ck, "cv": cv}
+    if kind == ATTNX:
+        h = apply_norm(cfg, x, p["ln1"])
+        q, k, v = attn.qkv_proj(cfg, p["attn"], h, positions)
+        kv = attn.cache_from_kv(k, v, positions, capacity)
+        o = attn.attend(cfg, q, k, v, positions, positions)
+        x = x + attn.out_proj(p["attn"], o)
+        ck, cv = attn.cross_kv(cfg, p["xattn"], enc)
+        h = apply_norm(cfg, x, p["ln_x"])
+        x = x + attn.cross_attention(cfg, p["xattn"], h, (ck, cv))
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        return x, {"kv": kv, "ck": ck, "cv": cv}
+    if kind == RWKV:
+        h = apply_norm(cfg, x, p["ln1"])
+        y, state = rwkv.rwkv_time_mix_prefill(cfg, p["tm_cm"], h)
+        x = x + y
+        h2 = apply_norm(cfg, x, p["ln2"])
+        x = x + rwkv.rwkv_channel_mix(cfg, p["tm_cm"], h2)
+        cache = {"state": state, "tm_shift": h[:, -1], "cm_shift": h2[:, -1]}
+        return x, cache
+    if kind == RGLRU:
+        h = apply_norm(cfg, x, p["ln1"])
+        y, cache = griffin.rglru_block_prefill(cfg, p["rec"], h)
+        x = x + y
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        return x, cache
+    raise ValueError(kind)
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    *,
+    frontend: Optional[jax.Array] = None,
+    capacity: Optional[int] = None,
+    dist: Optional[DistContext] = None,
+) -> Tuple[jax.Array, tuple]:
+    """Returns (logits_last (B, V), caches)."""
+    B, S = tokens.shape
+    capacity = capacity or S
+    positions = jnp.arange(S, dtype=jnp.int32)
+    dp_spec = _dp_spec(dist, B)
+
+    enc = None
+    if cfg.encoder_layers:
+        enc = _run_encoder(cfg, params, frontend)
+    elif cfg.family == "vlm":
+        enc = frontend
+
+    x = _embed_tokens(cfg, params, tokens)
+    x = _positions_embed(cfg, params, x, positions)
+    if dist:
+        x = _constrain(x, dist, dp_spec)
+
+    caches = []
+    for group, gp in zip(cfg.groups, params["groups"]):
+
+        def block(x, p_block, _group=group):
+            outs = []
+            for kind, p in zip(_group.pattern, p_block):
+                x, c = _prefill_layer(cfg, kind, p, x, positions, enc, capacity, dist)
+                outs.append(c)
+            if dist:
+                x = _constrain(x, dist, dp_spec)
+            return x, tuple(outs)
+
+        x, cache_stack = jax.lax.scan(block, x, gp)
+        caches.append(cache_stack)
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params["embed"], x[:, -1])
+    return logits, tuple(caches)
+
+
+# --------------------------------------------------------------------------
+# Decode: one token against the caches.
+# --------------------------------------------------------------------------
+
+def _decode_layer(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    pos: jax.Array,  # scalar
+    cache: dict,
+    dist: Optional[DistContext],
+) -> Tuple[jax.Array, dict]:
+    if kind in (ATTN, LOCAL):
+        h = apply_norm(cfg, x, p["ln1"])
+        a, cache = attn.decode_attention(
+            cfg, p["attn"], h, pos, cache, window=cfg.window if kind == LOCAL else 0
+        )
+        if cfg.post_norms:
+            a = apply_norm(cfg, a, p["post_ln1"])
+        x = x + a
+        h = apply_norm(cfg, x, p["ln2"])
+        if cfg.is_moe:
+            m, _ = _moe_call(cfg, p["moe"], h, dist)
+        else:
+            m = mlp_apply(cfg, p["mlp"], h)
+        if cfg.post_norms:
+            m = apply_norm(cfg, m, p["post_ln2"])
+        x = x + m
+        return x, cache
+    if kind == XATTN:
+        h = apply_norm(cfg, x, p["ln1"])
+        a = attn.cross_attention(cfg, p["xattn"], h, (cache["ck"], cache["cv"]))
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * mlp_apply(cfg, p["mlp"], h)
+        return x, cache
+    if kind == ATTNX:
+        h = apply_norm(cfg, x, p["ln1"])
+        a, kv = attn.decode_attention(cfg, p["attn"], h, pos, cache["kv"], window=0)
+        x = x + a
+        h = apply_norm(cfg, x, p["ln_x"])
+        x = x + attn.cross_attention(cfg, p["xattn"], h, (cache["ck"], cache["cv"]))
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        return x, dict(cache, kv=kv)
+    if kind == RWKV:
+        h = apply_norm(cfg, x, p["ln1"])
+        y, cache = rwkv.rwkv_time_mix_decode(cfg, p["tm_cm"], h, cache)
+        x = x + y
+        h2 = apply_norm(cfg, x, p["ln2"])
+        y2, cache = rwkv.rwkv_channel_mix_decode(cfg, p["tm_cm"], h2, cache)
+        x = x + y2
+        return x, cache
+    if kind == RGLRU:
+        h = apply_norm(cfg, x, p["ln1"])
+        y, cache = griffin.rglru_block_decode(cfg, p["rec"], h, cache)
+        x = x + y
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        return x, cache
+    raise ValueError(kind)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    caches: tuple,
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # scalar int32 — absolute position of this token
+    *,
+    dist: Optional[DistContext] = None,
+) -> Tuple[jax.Array, tuple]:
+    """Returns (logits (B, V) f32, new_caches)."""
+    dp_spec = _dp_spec(dist, token.shape[0])
+    x = _embed_tokens(cfg, params, token)
+    x = _positions_embed(cfg, params, x, pos[None])
+    if dist:
+        x = _constrain(x, dist, dp_spec)
+
+    new_caches = []
+    for group, gp, gc in zip(cfg.groups, params["groups"], caches):
+
+        def block(x, inputs, _group=group):
+            p_block, c_block = inputs
+            new_c = []
+            for kind, p, c in zip(_group.pattern, p_block, c_block):
+                x, c2 = _decode_layer(cfg, kind, p, x, pos, c, dist)
+                new_c.append(c2)
+            return x, tuple(new_c)
+
+        x, cache_stack = jax.lax.scan(block, x, (gp, gc))
+        new_caches.append(cache_stack)
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params["embed"], x[:, -1])
+    return logits, tuple(new_caches)

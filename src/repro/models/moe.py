@@ -1,0 +1,203 @@
+"""Mixture-of-Experts layer with explicit all-to-all dispatch.
+
+This is the paper's MPI_Alltoall(v) case study living inside the model: the
+expert-parallel dispatch is a real all-to-all whose *strategy* (direct /
+chunked) is selected by ``repro.core.planner`` from the performance models.
+
+Expert-shard ("virtual expert") layout
+--------------------------------------
+The EP axis is the mesh "model" axis of size P.  With E experts and
+``r = ep_shards = P // E`` (1 when E == P), each expert's FF width is split
+into r shards; virtual expert j on device j implements (expert j // r,
+ff-shard j % r).  A token routed to expert e is sent to all r of its shards
+(payload duplication factor r — the paper's "same data sent in multiple
+messages" case, §V), each shard returns a partial output (row-parallel
+contraction), and the source sums the r partials in the combine step.
+
+Weights are stored in virtual layout from init so no resharding reshape is
+paid per layer:  w_in (E*r, d, 2*ff/r), w_out (E*r, ff/r, d).
+
+Capacity-based bucketing: per (source device, expert) bucket of C tokens,
+C = ceil(T_slice * top_k / E * capacity_factor) rounded to a multiple of 8;
+overflow tokens are dropped (standard MoE capacity semantics; the dense
+reference path below has no drops and tests use a capacity factor large
+enough to make both paths agree exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init, dtype_of
+
+
+# --------------------------------------------------------------------------
+# Parameters (virtual-expert layout).
+# --------------------------------------------------------------------------
+
+def moe_params(cfg: ModelConfig, rng: jax.Array, ep_shards: int = 1) -> dict:
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    r = ep_shards
+    assert ff % r == 0, (ff, r)
+    ffv = ff // r
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "router": dense_init(k1, (d, E), jnp.float32, fan_in=d),
+        "w_in": dense_init(k2, (E * r, d, 2 * ffv), dt, fan_in=d),
+        "w_out": dense_init(k3, (E * r, ffv, d), dt, fan_in=ffv),
+    }
+
+
+def _route(cfg: ModelConfig, router_w: jax.Array, x: jax.Array):
+    """Top-k routing.  x: (T, d) -> (gates (T,k), idx (T,k), aux_loss)."""
+    logits = x.astype(jnp.float32) @ router_w  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renorm
+    # Load-balance aux loss (Switch/Mixtral form): E * mean_e(f_e * p_e).
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    onehot = jax.nn.one_hot(idx[:, 0], E)  # top-1 assignment fraction
+    ce = jnp.mean(onehot, axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates.astype(x.dtype), idx, aux
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+# --------------------------------------------------------------------------
+# Dense reference path (single device; also the semantic oracle in tests).
+# Computes every token through every virtual expert — smoke-scale only.
+# --------------------------------------------------------------------------
+
+def moe_apply_dense(cfg: ModelConfig, p: dict, x: jax.Array, ep_shards: int = 0):
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    gates, idx, aux = _route(cfg, p["router"], xt)
+    E = cfg.n_experts
+    r = p["w_in"].shape[0] // E  # virtual layout is recorded in the shapes
+    # (Ev, T, 2ffv) -> act -> (Ev, T, d) partials
+    h = jnp.einsum("td,edf->etf", xt, p["w_in"])
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = activation(cfg, gate_h) * up_h
+    outs = jnp.einsum("etf,efd->etd", h, p["w_out"])  # (Ev, T, d)
+    outs = outs.reshape(E, r, -1, d).sum(axis=1)  # (E, T, d) true expert out
+    # combine with top-k gates
+    weight = jnp.zeros((xt.shape[0], E), x.dtype)
+    weight = weight.at[jnp.arange(xt.shape[0])[:, None], idx].add(gates)
+    y = jnp.einsum("te,etd->td", weight, outs)
+    return y.reshape(B, S, d), aux
+
+
+# --------------------------------------------------------------------------
+# Sharded path: runs INSIDE shard_map; "model" axis carries the experts.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEAxis:
+    name: object  # mesh axis (or tuple of axes) carrying virtual experts
+    size: int  # P = E * r = prod(axis_sizes)
+    ep_shards: int  # r
+    axis_sizes: Tuple[int, ...] = ()  # per-axis sizes (multi-axis EP)
+
+    @property
+    def names(self):
+        return self.name if isinstance(self.name, tuple) else (self.name,)
+
+
+def moe_apply_sharded_inner(
+    cfg: ModelConfig,
+    p: dict,  # w_in/w_out local slices (1, ...); router replicated
+    x_loc: jax.Array,  # (B_loc, S, d) — replicated over the expert axis
+    ax: MoEAxis,
+    strategy: str = "direct",
+    a2a_chunks: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-sliced MoE with a2a dispatch.  Returns (y_loc, aux_loss)."""
+    B, S, d = x_loc.shape
+    P, r, E = ax.size, ax.ep_shards, cfg.n_experts
+    T = B * S
+    xt = x_loc.reshape(T, d)
+
+    # --- my token slice -----------------------------------------------------
+    tslice = -(-T // P)
+    pad = P * tslice - T
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), xt.dtype)], axis=0)
+    m = jax.lax.axis_index(ax.names)  # linearized over the expert axes
+    xs = jax.lax.dynamic_slice_in_dim(xt, m * tslice, tslice, axis=0)  # (Ts, d)
+
+    gates, idx, aux = _route(cfg, p["router"], xs)
+    C = capacity(cfg, tslice)
+
+    # --- bucket build: (E, C, d) --------------------------------------------
+    e_flat = idx.reshape(-1)  # (Ts*k,)
+    t_flat = jnp.repeat(jnp.arange(tslice), cfg.top_k)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (Ts*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot  # position within expert
+    pos_flat = jnp.take_along_axis(pos_all, e_flat[:, None], axis=1)[:, 0]
+    keep = pos_flat < C
+    pos_clip = jnp.minimum(pos_flat, C - 1)
+    buckets = jnp.zeros((E, C, d), xs.dtype)
+    vals = xs[t_flat] * keep[:, None].astype(xs.dtype)
+    buckets = buckets.at[e_flat, pos_clip].add(vals)
+
+    # --- duplicate to virtual experts & all-to-all ---------------------------
+    dest_expert = jnp.arange(P) // r
+    send = jnp.take(buckets, dest_expert, axis=0)  # (P, C, d)
+
+    def one_a2a(buf):
+        if strategy == "hierarchical" and len(ax.names) == 2:
+            # two-hop a2a (paper §VI): exchange over the inner (fast) axis
+            # bucketing by outer destination, then over the outer axis — the
+            # slow tier sees k_outer-1 messages per rank instead of P-1.
+            from repro.comms.alltoall import alltoall_hier_inner
+
+            outer, inner = ax.names
+            return alltoall_hier_inner(
+                buf, outer, inner,
+                outer_size=ax.axis_sizes[0],
+                inner_size=ax.axis_sizes[1],
+            )
+        return jax.lax.all_to_all(buf, ax.names, split_axis=0, concat_axis=0, tiled=True)
+
+    def a2a(buf):
+        if a2a_chunks > 1 and C % a2a_chunks == 0:
+            # chunked a2a: independent ops the scheduler can overlap (paper
+            # §IV "split the payload over the slow tier" applied in time).
+            parts = jnp.split(buf, a2a_chunks, axis=1)
+            return jnp.concatenate([one_a2a(q) for q in parts], axis=1)
+        return one_a2a(buf)
+
+    recv = a2a(send)  # (P, C, d): slot s = bucket from source s for my shard
+
+    # --- local expert compute (my virtual expert) ----------------------------
+    w_in = p["w_in"][0]  # (d, 2ffv)
+    w_out = p["w_out"][0]  # (ffv, d)
+    h = jnp.einsum("pcd,df->pcf", recv, w_in)
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = activation(cfg, gate_h) * up_h
+    part = jnp.einsum("pcf,fd->pcd", h, w_out)  # partial over ff shards
+
+    back = a2a(part)  # (P, C, d): slot n = my bucket processed by dest n
+
+    # --- combine -------------------------------------------------------------
+    expert_out = back.reshape(E, r, C, d).sum(axis=1)  # (E, C, d)
+    picked = expert_out[e_flat, pos_clip]  # (Ts*k, d)
+    w = (gates.reshape(-1) * keep.astype(gates.dtype))[:, None]
+    y_slice = jnp.zeros((tslice, d), x_loc.dtype)
+    y_slice = y_slice.at[t_flat].add((picked * w).astype(x_loc.dtype))
+
+    # --- reassemble slices over the expert axis ------------------------------
+    y_all = jax.lax.all_gather(y_slice, ax.names, axis=0, tiled=True)  # (P*Ts, d)
+    y = y_all[:T].reshape(B, S, d)
+    aux = jax.lax.pmean(aux, ax.names)
+    return y, aux

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init_state,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,14 @@
+"""Learning-rate schedules (linear warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    prog = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)

@@ -1,0 +1,5 @@
+from repro.runtime.straggler import StragglerMonitor, StragglerEvent
+from repro.runtime.fault import InjectedFault, LoopState, run_with_recovery
+from repro.runtime.elastic import reshard_tree, restore_on_mesh
+
+__all__ = [k for k in dir() if not k.startswith("_")]

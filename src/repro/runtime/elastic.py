@@ -1,0 +1,40 @@
+"""Elastic re-scale: move a run between meshes of different shape.
+
+A checkpoint stores leaves unsharded (checkpoint/checkpointer.py), so
+elasticity is re-placement: build shardings for the NEW mesh from the same
+rules (sharding/specs.py) and device_put.  Batch-size bookkeeping: keep the
+GLOBAL batch constant across re-scales (per-device batch changes), so the
+loss trajectory is unchanged — the elastic test asserts loss continuity.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.sharding import specs
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sh = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+    )
+    return jax.tree_util.tree_unflatten(
+        treedef, [jax.device_put(l, s) for l, s in zip(leaves, sh)]
+    )
+
+
+def restore_on_mesh(
+    ckpt: Checkpointer,
+    step: int,
+    like: Any,  # pytree of arrays/ShapeDtypeStructs (params shapes)
+    new_mesh,
+    *,
+    fsdp: bool = True,
+) -> Any:
+    """Load checkpointed params onto a different mesh (grow or shrink)."""
+    host_tree = ckpt.restore(step, like)
+    shardings = specs.param_shardings(host_tree, new_mesh, fsdp=fsdp)
+    return reshard_tree(host_tree, shardings)

@@ -1,0 +1,66 @@
+"""Straggler detection: EWMA step-time monitor with outlier flagging.
+
+At thousand-node scale the slowest participant sets the step time; catching
+a drifting node early (thermals, ECC retries, a noisy neighbour on the DCN)
+is a restart-or-reshard decision.  This monitor keeps an EWMA + EW variance
+of step wall-times and flags steps beyond ``z_threshold`` deviations, plus a
+consecutive-slow counter that triggers mitigation advice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+    zscore: float
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        alpha: float = 0.1,
+        z_threshold: float = 3.0,
+        consecutive_for_action: int = 3,
+        warmup_steps: int = 5,
+    ):
+        self.alpha = alpha
+        self.z = z_threshold
+        self.consecutive_for_action = consecutive_for_action
+        self.warmup = warmup_steps
+        self.ewma: Optional[float] = None
+        self.ewvar: float = 0.0
+        self.n = 0
+        self.consecutive_slow = 0
+        self.events: List[StragglerEvent] = []
+
+    def record(self, step: int, duration: float) -> Optional[StragglerEvent]:
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = duration
+            return None
+        delta = duration - self.ewma
+        std = math.sqrt(self.ewvar) if self.ewvar > 0 else float("inf")
+        z = delta / std if std > 0 and self.n > self.warmup else 0.0
+        is_outlier = self.n > self.warmup and z > self.z
+        if is_outlier:
+            # outliers are *flagged* but excluded from the EWMA so a single
+            # hiccup doesn't poison the baseline
+            self.consecutive_slow += 1
+            ev = StragglerEvent(step, duration, self.ewma, z)
+            self.events.append(ev)
+            return ev
+        self.consecutive_slow = 0
+        self.ewma += self.alpha * delta
+        self.ewvar = (1 - self.alpha) * (self.ewvar + self.alpha * delta * delta)
+        return None
+
+    @property
+    def should_mitigate(self) -> bool:
+        """Persistent slowness -> advise checkpoint + reshard/restart."""
+        return self.consecutive_slow >= self.consecutive_for_action

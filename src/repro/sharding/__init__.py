@@ -1,0 +1,10 @@
+from repro.sharding.specs import (
+    batch_sharding,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+    param_spec,
+    tp_adapt,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

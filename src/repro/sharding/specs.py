@@ -1,0 +1,275 @@
+"""Sharding rules: parameter / optimizer / cache PartitionSpecs.
+
+Logical placement (mesh axes: optional "pod", "data", "model"):
+  * TP   — attention heads, MLP hidden, vocab, experts, recurrent widths
+           shard over "model".
+  * FSDP — each param's non-TP large dim additionally shards over "data"
+           (within-pod: the all-gathers ride ICI; "pod" stays pure DP so
+           only gradient reduction crosses DCN — the paper's staging rule).
+  * DP   — batch over ("pod", "data").
+
+Every rule degrades gracefully: an axis is only assigned if the dim is
+divisible by the mesh axis size (e.g. whisper's 12 heads on a 16-way model
+axis simply stay replicated).
+
+``tp_adapt`` rewrites a config for a TP width: GQA KV heads that do not
+divide the axis are *expanded* (each KV head duplicated tp/KV times — the
+standard Megatron/vLLM KV-replication layout, here materialized in the
+weight shapes); MoE expert counts below the axis size get ``ep_shards``
+(see models/moe.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Config adaptation for a TP width.
+# --------------------------------------------------------------------------
+
+def tp_adapt(cfg: ModelConfig, tp: int) -> Tuple[ModelConfig, int]:
+    """Returns (deploy config, ep_shards).
+
+    * KV expansion: if heads shard (H % tp == 0) but KV doesn't divide tp,
+      and tp % KV == 0, expand n_kv_heads -> tp (duplicated KV heads).
+    * MoE: ep_shards = tp // n_experts when experts don't fill the axis.
+    """
+    new = cfg
+    if cfg.n_heads % tp == 0 and cfg.n_kv_heads < cfg.n_heads:
+        if cfg.n_kv_heads % tp != 0 and tp % cfg.n_kv_heads == 0:
+            new = dataclasses.replace(new, n_kv_heads=tp)
+    ep_shards = 1
+    if cfg.is_moe:
+        if cfg.n_experts % tp == 0:
+            ep_shards = 1  # experts tile the axis exactly (or a multiple)
+        elif tp % cfg.n_experts == 0:
+            ep_shards = tp // cfg.n_experts
+    return new, ep_shards
+
+
+# --------------------------------------------------------------------------
+# Path-rule engine.
+# --------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# rule: (regex on path suffix, logical spec per dim)
+# logical names: "tp" (model), "fsdp" (data), None.
+_PARAM_RULES = [
+    (r"embed/tok$", ("tp", "fsdp")),
+    (r"embed/head$", ("fsdp", "tp")),
+    (r"embed/pos$", (None, "tp")),
+    (r"(attn|xattn)/wq$", ("fsdp", "tp", None)),
+    (r"(attn|xattn)/wk$", ("fsdp", "tp", None)),
+    (r"(attn|xattn)/wv$", ("fsdp", "tp", None)),
+    (r"(attn|xattn)/wo$", ("tp", None, "fsdp")),
+    (r"mlp/w_in$", ("fsdp", "tp")),
+    (r"mlp/w_out$", ("tp", "fsdp")),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_in$", ("ep", "fsdp", None)),
+    (r"moe/w_out$", ("ep", None, "fsdp")),
+    # rwkv time-mix / channel-mix
+    (r"tm_cm/w[rkvg]$", ("fsdp", "tp")),
+    (r"tm_cm/wo$", ("tp", "fsdp")),
+    (r"tm_cm/decay_A$", ("fsdp", None)),
+    (r"tm_cm/decay_B$", (None, "tp")),
+    (r"tm_cm/ln_scale$", ("tp", None)),
+    (r"tm_cm/cm_k$", ("fsdp", "tp")),
+    (r"tm_cm/cm_v$", ("tp", "fsdp")),
+    (r"tm_cm/cm_r$", ("fsdp", None)),
+    # griffin
+    (r"rec/w_gate$", ("fsdp", "tp")),
+    (r"rec/w_in$", ("fsdp", "tp")),
+    (r"rec/conv_w$", (None, "tp")),
+    (r"rec/conv_b$", ("tp",)),
+    (r"rec/gate_[ax]$", ("tp", None, None)),
+    (r"rec/lam$", ("tp",)),
+    (r"rec/w_out$", ("tp", "fsdp")),
+]
+
+
+def _resolve(
+    logical: Optional[str],
+    dim: int,
+    mesh: Mesh,
+    fsdp_axes: Tuple[str, ...],
+    model_axis: str,
+    ep_axes: Tuple[str, ...] = ("model",),
+) -> Any:
+    if logical is None:
+        return None
+    if logical == "tp":
+        ax = model_axis
+        if ax in mesh.shape and dim % mesh.shape[ax] == 0:
+            return ax
+        return None
+    if logical == "ep":
+        usable = tuple(a for a in ep_axes if a in mesh.shape)
+        total = math.prod(mesh.shape[a] for a in usable) if usable else 1
+        if usable and dim % total == 0:
+            return usable if len(usable) > 1 else usable[0]
+        return None
+    if logical == "fsdp":
+        total = math.prod(mesh.shape[a] for a in fsdp_axes if a in mesh.shape)
+        usable = tuple(a for a in fsdp_axes if a in mesh.shape)
+        if usable and total > 1 and dim % total == 0:
+            return usable if len(usable) > 1 else usable[0]
+        return None
+    raise ValueError(logical)
+
+
+def param_spec(
+    path_s: str,
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    fsdp_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    ep_axes: Tuple[str, ...] = ("model",),
+) -> P:
+    stacked = path_s.startswith("groups/") or "encoder/layers/" in path_s
+    core_shape = shape[1:] if stacked else shape
+    spec: Optional[Tuple] = None
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path_s):
+            if len(logical) != len(core_shape):
+                spec = None  # shape mismatch (e.g. un-stacked scalar) -> replicate
+                break
+            spec = tuple(
+                _resolve(
+                    l if (fsdp or l != "fsdp") else None,
+                    d, mesh, fsdp_axes, model_axis, ep_axes,
+                )
+                for l, d in zip(logical, core_shape)
+            )
+            break
+    if spec is None:
+        spec = (None,) * len(core_shape)
+    # drop duplicate axis uses (e.g. "data" in both ep_axes and fsdp_axes)
+    seen = set()
+    cleaned = []
+    for s_ in spec:
+        axes = s_ if isinstance(s_, tuple) else (s_,) if s_ else ()
+        if any(a in seen for a in axes):
+            cleaned.append(None)
+        else:
+            seen.update(axes)
+            cleaned.append(s_)
+    spec = tuple(cleaned)
+    if stacked:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def param_shardings(
+    params_shape: Any,
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    fsdp_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    ep_axes: Tuple[str, ...] = ("model",),
+):
+    """Pytree of NamedShardings matching a params(-shaped) pytree."""
+
+    def one(path, leaf):
+        spec = param_spec(
+            _path_str(path),
+            leaf.shape,
+            mesh,
+            fsdp=fsdp,
+            fsdp_axes=fsdp_axes,
+            model_axis=model_axis,
+            ep_axes=ep_axes,
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# --------------------------------------------------------------------------
+# Optimizer state: moments shard like params; step is replicated.
+# --------------------------------------------------------------------------
+
+def opt_shardings(params_shape, mesh: Mesh, **kw):
+    from repro.optim.adamw import AdamWState
+
+    p_sh = param_shardings(params_shape, mesh, **kw)
+    return AdamWState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh)
+
+
+# --------------------------------------------------------------------------
+# Decode-cache shardings.
+# --------------------------------------------------------------------------
+
+def cache_shardings(
+    caches_shape: Any,
+    mesh: Mesh,
+    *,
+    dp_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    seq_axis: str = "data",
+):
+    """KV caches: batch over dp when divisible, else the *sequence* dim
+    shards over ``seq_axis`` (long-context, batch=1); KV heads / recurrent
+    widths over "model" when divisible."""
+    dp_total = math.prod(mesh.shape[a] for a in dp_axes if a in mesh.shape)
+
+    def one(path, leaf):
+        path_s = _path_str(path)
+        shp = leaf.shape  # leading dim = layer count (stacked)
+        m = mesh.shape.get(model_axis, 1)
+
+        def div(i, ax_size):
+            return shp[i] % ax_size == 0 and ax_size > 1
+
+        if re.search(r"/(k|v|ck|cv)$", path_s) and len(shp) == 5:
+            # (count, B, cap, G, dh)
+            b_ax = dp_axes if div(1, dp_total) else None
+            s_ax = None
+            if b_ax is None and div(2, mesh.shape.get(seq_axis, 1)):
+                s_ax = seq_axis
+            g_ax = model_axis if div(3, m) else None
+            return NamedSharding(mesh, P(None, b_ax, s_ax, g_ax, None))
+        if path_s.endswith("state") and len(shp) == 5:  # rwkv (count,B,H,K,V)
+            b_ax = dp_axes if div(1, dp_total) else None
+            h_ax = model_axis if div(2, m) else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        if re.search(r"(tm_shift|cm_shift|h)$", path_s) and len(shp) == 3:
+            b_ax = dp_axes if div(1, dp_total) else None
+            d_ax = model_axis if div(2, m) else None
+            return NamedSharding(mesh, P(None, b_ax, d_ax))
+        if path_s.endswith("conv") and len(shp) == 4:  # (count,B,w,W)
+            b_ax = dp_axes if div(1, dp_total) else None
+            d_ax = model_axis if div(3, m) else None
+            return NamedSharding(mesh, P(None, b_ax, None, d_ax))
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+def batch_sharding(mesh: Mesh, batch: int, ndim: int, dp_axes: Tuple[str, ...]):
+    dp_total = math.prod(mesh.shape[a] for a in dp_axes if a in mesh.shape)
+    lead = dp_axes if (dp_total > 1 and batch % dp_total == 0) else None
+    return NamedSharding(mesh, P(lead, *([None] * (ndim - 1))))

@@ -1,0 +1,8 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see
+# the real (1-device) CPU. Multi-device tests spawn subprocesses with
+# --xla_force_host_platform_device_count set (tests/_multidevice_checks.py),
+# and the 512-device dry-run sets it inside repro/launch/dryrun.py itself.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,27 @@
+"""Multi-device comms/integration checks (subprocess with 8 CPU devices —
+conftest must not set device flags for the in-process tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.timeout(900)
+def test_multidevice_checks():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_multidevice_checks.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=850,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "ALL_MULTIDEVICE_OK" in proc.stdout

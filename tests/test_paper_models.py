@@ -1,0 +1,233 @@
+"""The paper's own claims, asserted against our implementation of its models.
+
+Each test cites the figure/table it validates (see DESIGN.md §8 index).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    LASSEN,
+    SUMMIT,
+    Locality,
+    TABLE_I,
+    TABLE_II,
+    TABLE_III_BETA_N,
+    crossover_size,
+    gpudirect_time,
+    memcpy_time,
+    paper_model,
+    three_step_time,
+)
+from repro.core.fitting import fit_segmented, round_trip_check
+from repro.core.maxrate import MaxRateParams, maxrate_time, node_split_time, saturating_ppn
+from repro.core.params import CopyDirection, Protocol
+from repro.core.planner import (
+    message_count_crossover,
+    plan_gpu_collective,
+    plan_gpu_messages,
+    CollectiveKind,
+)
+from repro.core.simulate import CollectiveProblem, simulate_all
+from repro.core.topology import TpuPodTopology
+
+SIZES = np.logspace(0, 8, 50)  # 1 B .. 100 MB
+FIG3_SIZES = np.logspace(0, np.log10(512 * 1024), 40)  # the plotted range
+
+
+# -- Fig 2 / Table I: locality ordering ------------------------------------
+
+@pytest.mark.parametrize("machine", ["summit", "lassen"])
+def test_fig2_locality_ordering_cpu(machine):
+    """On-socket <= on-node for CPU messages at every size (the paper's
+    locality split; off-node crosses the network so it is only slower at
+    small/medium sizes where latency dominates)."""
+    on_socket = paper_model(machine, "cpu", Locality.ON_SOCKET).time(SIZES)
+    on_node = paper_model(machine, "cpu", Locality.ON_NODE).time(SIZES)
+    assert (on_socket <= on_node * (1 + 1e-9)).all()
+
+
+def test_table1_protocol_monotone_alpha():
+    """Rendezvous latency > eager latency > short latency (both machines,
+    CPU path) — the protocol ladder the paper fits per segment."""
+    for machine in ("summit", "lassen"):
+        for loc in Locality:
+            a = {p: TABLE_I[machine]["cpu"][p][loc].alpha for p in Protocol}
+            assert a[Protocol.REND] >= a[Protocol.EAGER] >= a[Protocol.SHORT]
+
+
+# -- Fig 3: GPUDirect vs 3-step for a single message ------------------------
+
+@pytest.mark.parametrize("machine", ["summit", "lassen"])
+def test_fig3_gpudirect_wins_single_message(machine):
+    """Fig 3: 'GPUDirect is more efficient for all modeled sizes' when
+    sending ONE message between two GPUs on different nodes."""
+    direct = gpudirect_time(machine, FIG3_SIZES, 1, 1)
+    staged = three_step_time(machine, FIG3_SIZES, 1, 1, 1)
+    assert (direct <= staged * (1 + 1e-9)).all()
+
+
+def test_fig3_model_implied_crossover_beyond_plot():
+    """Beyond the plotted range the paper's own constants imply the 3-step
+    path eventually wins even for one message (Summit: ~0.6 MB, where the
+    CPU rendezvous beta + two memcpy betas undercut the GPUDirect beta).
+    Documented in EXPERIMENTS.md as a model-implied observation."""
+    big = np.array([4 * 2**20, 32 * 2**20], float)
+    direct = gpudirect_time("summit", big, 1, 1)
+    staged = three_step_time("summit", big, 1, 1, 1)
+    assert (staged < direct).all()
+
+
+# -- Fig 4: splitting across cores (max-rate) --------------------------------
+
+def test_fig4_all_cores_best_despite_cap():
+    """Fig 4: even with the injection cap, using all 40 cores to move a
+    node's payload is fastest (large payload)."""
+    beta_p = TABLE_I["summit"]["cpu"][Protocol.REND][Locality.OFF_NODE].beta
+    alpha = TABLE_I["summit"]["cpu"][Protocol.REND][Locality.OFF_NODE].alpha
+    params = MaxRateParams(alpha, beta_p, TABLE_III_BETA_N["summit"]["cpu"])
+    total = 64 * 2**20
+    times = {ppn: float(node_split_time(params, total, ppn)) for ppn in (1, 2, 4, 10, 20, 40)}
+    assert times[40] == min(times.values())
+    # and the cap makes 40 cores sub-linear vs 4 cores
+    assert times[4] / times[40] < 10.0
+
+
+def test_maxrate_reduces_to_postal_below_cap():
+    params = MaxRateParams(1e-6, 1e-9, 1e-11)  # cap binds only at ppn > 100
+    t1 = maxrate_time(params, 1e6, ppn=1)
+    assert np.isclose(t1, 1e-6 + 1e-9 * 1e6)
+    assert saturating_ppn(params) == pytest.approx(100.0)
+
+
+# -- Fig 5: multi-message crossover ------------------------------------------
+
+def test_fig5_crossover_summit_about_10():
+    """Fig 5: 'copying to the CPU is faster than GPUDirect for nearly all
+    message sizes when sending at least 10 messages on Summit'."""
+    n = message_count_crossover(SUMMIT, 1024)
+    assert n is not None and n <= 10
+    n4 = message_count_crossover(SUMMIT, 4096)
+    assert n4 is not None and n4 <= 10
+
+
+def test_fig5_crossover_lassen_about_100():
+    """Fig 5: 'on Lassen, around 100 messages are required'."""
+    n = message_count_crossover(LASSEN, 1024)
+    assert n is not None and 10 < n <= 150
+
+
+def test_fig5_more_cores_faster_staged():
+    t1 = three_step_time("summit", 65536, 32, 1, 6)
+    t6 = three_step_time("summit", 65536, 32, 6, 6)
+    assert float(t6) < float(t1)
+
+
+# -- Fig 6: collective strategies --------------------------------------------
+
+@pytest.mark.parametrize("machine_topo", [SUMMIT, LASSEN])
+def test_fig6_extra_msg_wins_small(machine_topo):
+    """Fig 6: 'the extra message approach outperforms all others for very
+    small messages'."""
+    p = CollectiveProblem(topo=machine_topo, nodes=32, msg_bytes=8.0,
+                          split_messages=True)
+    costs = simulate_all(p)
+    assert min(costs, key=costs.get) == "extra_msg"
+
+
+@pytest.mark.parametrize("machine_topo", [SUMMIT, LASSEN])
+def test_fig6_dup_devptr_wins_large(machine_topo):
+    """Fig 6: 'duplicate device pointer performs best for very large
+    messages'."""
+    p = CollectiveProblem(topo=machine_topo, nodes=32, msg_bytes=float(2**22),
+                          split_messages=True)
+    costs = simulate_all(p)
+    assert min(costs, key=costs.get) == "dup_devptr"
+
+
+@pytest.mark.parametrize("machine_topo", [SUMMIT, LASSEN])
+def test_fig6_staged_beats_cuda_aware_alltoall(machine_topo):
+    """Library-Alltoall lowering (per-core message count NOT reduced):
+    the copy-to-CPU family still beats CUDA-aware at small sizes; our
+    postal composition picks three_step/extra_msg there (the measured
+    extra-msg edge over three_step comes from message-rate contention the
+    postal model does not carry — DESIGN.md §2.1)."""
+    p = CollectiveProblem(topo=machine_topo, nodes=32, msg_bytes=64.0)
+    costs = simulate_all(p)
+    assert min(costs, key=costs.get) in ("three_step", "extra_msg")
+    assert costs["cuda_aware"] > min(costs.values())
+
+
+def test_fig6_planner_end_to_end():
+    plan = plan_gpu_collective(SUMMIT, 32, 8.0, CollectiveKind.ALLTOALLV)
+    assert plan.strategy == "extra_msg"
+    assert plan.speedup_over("cuda_aware") > 1.0
+    plan_large = plan_gpu_collective(SUMMIT, 32, float(2**22), CollectiveKind.ALLTOALLV)
+    assert plan_large.strategy == "dup_devptr"
+
+
+# -- Table II sanity ----------------------------------------------------------
+
+def test_table2_offsocket_slower():
+    for machine in ("summit", "lassen"):
+        on = memcpy_time(machine, CopyDirection.D2H, 1 << 20, on_socket=True)
+        off = memcpy_time(machine, CopyDirection.D2H, 1 << 20, on_socket=False)
+        assert float(on) < float(off)
+
+
+# -- Fitting round-trips -------------------------------------------------------
+
+def test_fit_round_trip_noiseless():
+    model = paper_model("summit", "cpu", Locality.OFF_NODE)
+    _, err = round_trip_check(model, noise=0.0)
+    assert err < 0.05
+
+
+def test_fit_round_trip_noisy():
+    model = paper_model("summit", "cpu", Locality.ON_SOCKET)
+    _, err = round_trip_check(model, noise=0.02, seed=1)
+    assert err < 0.35  # 2% multiplicative noise -> parameters within ~35%
+
+
+def test_crossover_size_bisection():
+    a = paper_model("summit", "gpu", Locality.OFF_NODE)
+    b = paper_model("summit", "cpu", Locality.OFF_NODE)
+    s = crossover_size(a, b)
+    if s is not None:
+        assert float(np.asarray(a.time(s * 1.5))) > float(np.asarray(b.time(s * 1.5)))
+
+
+# -- TPU planner (the adaptation) ----------------------------------------------
+
+def test_tpu_crosspod_direct_vs_staged():
+    """Large single transfers should use every injecting host (multirail /
+    direct), never the single-stream staged path (paper Fig 4 analogue)."""
+    from repro.core.planner import plan_tpu_crosspod
+
+    topo = TpuPodTopology(pods=2)
+    plan = plan_tpu_crosspod(topo, bytes_per_chip=float(1 << 24), n_msgs=1)
+    assert plan.strategy in ("direct", "multirail")
+    # with MANY small messages, paying the staging cost to cut per-message
+    # latency wins (paper Fig 5 analogue)
+    plan_many = plan_tpu_crosspod(topo, bytes_per_chip=4096.0, n_msgs=256)
+    assert plan_many.strategy in ("staged", "multirail")
+
+
+def test_tpu_allreduce_hierarchical_multi_pod():
+    from repro.core.planner import plan_tpu_allreduce
+
+    topo = TpuPodTopology(pods=2)
+    plan = plan_tpu_allreduce(topo, bytes_per_chip=float(1 << 26))
+    assert plan.strategy == "pod_hierarchical"
+
+
+def test_ep_dispatch_planner_crossover():
+    """Serving-layout dispatch: the planner picks the two-hop hierarchical
+    a2a at decode bucket sizes (message-count bound — paper Fig 6 small) and
+    direct for huge buckets (volume bound) — matching the measured dominance
+    in EXPERIMENTS.md §Perf cell B."""
+    from repro.comms.autotune import select_moe_dispatch_strategy
+
+    mesh = {"data": 16, "model": 16}
+    assert select_moe_dispatch_strategy(mesh, ("data", "model"), 8 * 6144 * 2.0) == "hierarchical"
+    assert select_moe_dispatch_strategy(mesh, ("data", "model"), 4e6) == "direct"
+    assert select_moe_dispatch_strategy(mesh, ("model",), 1e4) == "direct"

@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fitting import fit_postal
+from repro.core.maxrate import MaxRateParams, maxrate_time, multi_message_time
+from repro.core.params import Locality, PostalParams
+from repro.core.postal import SegmentedPostalModel, crossover_size, paper_model
+from repro.core.simulate import CollectiveProblem, simulate_all
+from repro.core.topology import SUMMIT, TpuPodTopology
+from repro.optim.compress import dequantize_int8, quantize_int8, quantize_with_feedback
+
+sizes_st = st.floats(min_value=1.0, max_value=1e9)
+alpha_st = st.floats(min_value=1e-8, max_value=1e-3)
+beta_st = st.floats(min_value=1e-12, max_value=1e-8)
+
+
+@given(alpha_st, beta_st, sizes_st, sizes_st)
+def test_postal_monotone_in_size(alpha, beta, s1, s2):
+    p = PostalParams(alpha, beta)
+    lo, hi = min(s1, s2), max(s1, s2)
+    assert p.time(lo) <= p.time(hi)
+
+
+@given(alpha_st, beta_st, st.integers(1, 64), sizes_st)
+def test_maxrate_never_faster_than_postal(alpha, beta, ppn, s):
+    """The injection cap can only hurt: max-rate time >= postal time."""
+    capped = MaxRateParams(alpha, beta, beta_N=beta / 4)
+    uncapped = MaxRateParams(alpha, beta, beta_N=None)
+    assert float(maxrate_time(capped, s, ppn)) >= float(maxrate_time(uncapped, s, ppn)) - 1e-15
+
+
+@given(alpha_st, beta_st, st.integers(1, 100), sizes_st)
+def test_multi_message_superadditive(alpha, beta, n, s):
+    """n messages cost >= 1 message of n*s bytes (latency amplification)."""
+    p = MaxRateParams(alpha, beta, None)
+    assert float(multi_message_time(p, s, n)) >= float(multi_message_time(p, n * s, 1)) - 1e-15
+
+
+@given(st.integers(1, 6), st.floats(min_value=8, max_value=1e7))
+def test_simulate_costs_positive_and_ranked(nodes_pow, msg_bytes):
+    p = CollectiveProblem(topo=SUMMIT, nodes=2**nodes_pow, msg_bytes=msg_bytes)
+    costs = simulate_all(p)
+    assert all(v > 0 for v in costs.values())
+
+
+@given(alpha_st, beta_st)
+@settings(max_examples=30)
+def test_fit_postal_recovers_exact(alpha, beta):
+    s = np.logspace(0, 7, 32)
+    t = alpha + beta * s
+    fit = fit_postal(s, t)
+    assert fit.alpha == pytest.approx(alpha, rel=0.02, abs=1e-12)
+    assert fit.beta == pytest.approx(beta, rel=0.02, abs=1e-18)
+
+
+def test_crossover_size_means_b_cheaper_after():
+    a = paper_model("summit", "gpu", Locality.OFF_NODE)
+    b = paper_model("summit", "cpu", Locality.OFF_NODE)
+    s = crossover_size(a, b)
+    if s is not None:
+        assert float(np.asarray(a.time(s * 2))) >= float(np.asarray(b.time(s * 2)))
+        if s > 2:  # a genuinely wins somewhere before the crossover
+            assert float(np.asarray(a.time(s / 4))) <= float(
+                np.asarray(b.time(s / 4))
+            ) * (1 + 1e-6)
+
+
+# -- quantization properties ------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_quantize_roundtrip_error_bound(seed, scale_pow):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(3000) * 10.0**scale_pow, jnp.float32)
+    q, s = quantize_int8(x, block=256)
+    deq = dequantize_int8(q, s, x.shape, block=256)
+    blocks = np.asarray(x)
+    err = np.abs(np.asarray(deq) - blocks)
+    # per-block bound: scale/2 = max|block| / 254
+    bmax = np.abs(blocks.reshape(-1)).max()
+    assert err.max() <= bmax / 254 + 1e-6 * bmax + 1e-12
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_error_feedback_telescopes(seed):
+    """Sum of dequantized grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(seed)
+    err = jnp.zeros(512, jnp.float32)
+    total_true = np.zeros(512, np.float64)
+    total_deq = np.zeros(512, np.float64)
+    for i in range(8):
+        g = jnp.asarray(rng.standard_normal(512), jnp.float32)
+        q, s, err = quantize_with_feedback(g, err, block=128)
+        total_true += np.asarray(g, np.float64)
+        total_deq += np.asarray(dequantize_int8(q, s, g.shape, block=128), np.float64)
+    resid = np.abs(total_true - (total_deq + np.asarray(err, np.float64)))
+    assert resid.max() < 1e-3
+
+
+# -- topology properties -----------------------------------------------------------
+
+@given(st.integers(0, 511), st.integers(0, 511))
+@settings(max_examples=50)
+def test_tpu_locality_symmetric(a, b):
+    topo = TpuPodTopology(pods=2)
+    assert topo.locality(a, b) == topo.locality(b, a)
+    pa, pb = topo.coords(a)[0], topo.coords(b)[0]
+    if pa == pb:
+        assert topo.ici_hops(a, b) == topo.ici_hops(b, a)
+        assert topo.ici_hops(a, b) <= 16  # torus diameter of 16x16
+
+
+@given(st.integers(0, 255))
+def test_tpu_hops_zero_iff_same(chip):
+    topo = TpuPodTopology(pods=1)
+    assert topo.ici_hops(chip, chip) == 0

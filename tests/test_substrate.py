@@ -1,0 +1,182 @@
+"""Checkpointing, fault recovery, data determinism, straggler detection,
+sharding rules, schedules."""
+import os
+import tempfile
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.data import SyntheticLM
+from repro.optim import AdamWConfig, apply_updates, init_state, warmup_cosine
+from repro.runtime import InjectedFault, StragglerMonitor, run_with_recovery
+from repro.sharding import specs
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5, "d": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip_bitwise():
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td)
+        t = _tree()
+        ck.save(3, t, block=True)
+        r = ck.restore(3, jax.tree.map(np.asarray, t))
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+            assert np.asarray(a).dtype == np.asarray(b).dtype  # bf16 preserved
+
+
+def test_checkpoint_async_and_gc():
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, _tree(), block=False)
+        ck.wait()
+        assert ck.all_steps() == [3, 4]
+        assert ck.latest_step() == 4
+
+
+def test_checkpoint_ignores_incomplete():
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td)
+        ck.save(5, _tree(), block=True)
+        # fake a torn write
+        os.makedirs(os.path.join(td, "step_00000009"))
+        assert ck.latest_step() == 5
+
+
+# -- fault-tolerant loop ---------------------------------------------------------
+
+def _toy_step(params, opt, batch):
+    new = jax.tree.map(lambda p: p + batch["x"].sum(), params)
+    return new, opt, {"loss": batch["x"].sum()}
+
+
+def test_recovery_is_bitwise_identical():
+    def batch_fn(step):
+        return {"x": jnp.asarray(np.random.default_rng(step).standard_normal(4), jnp.float32)}
+
+    init_p = {"w": jnp.zeros(4)}
+
+    with tempfile.TemporaryDirectory() as td:
+        clean = run_with_recovery(
+            step_fn=_toy_step, batch_fn=batch_fn, init_params=init_p, init_opt={},
+            checkpointer=Checkpointer(td), total_steps=20, checkpoint_every=5,
+        )
+
+    faults = {12}
+
+    def hook(step):
+        if step in faults:
+            faults.remove(step)
+            raise InjectedFault(f"node died at {step}")
+
+    with tempfile.TemporaryDirectory() as td:
+        faulty = run_with_recovery(
+            step_fn=_toy_step, batch_fn=batch_fn, init_params=init_p, init_opt={},
+            checkpointer=Checkpointer(td), total_steps=20, checkpoint_every=5,
+            fault_hook=hook,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(clean.params["w"]), np.asarray(faulty.params["w"])
+    )
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(warmup_steps=3)
+    for i in range(20):
+        ev = mon.record(i, 0.1 + 0.001 * (i % 3))
+        assert ev is None
+    ev = mon.record(20, 1.5)
+    assert ev is not None and ev.zscore > 3
+    assert not mon.should_mitigate
+    mon.record(21, 1.5), mon.record(22, 1.5)
+    assert mon.should_mitigate
+
+
+# -- data pipeline ------------------------------------------------------------------
+
+def test_data_deterministic_across_instances():
+    a = SyntheticLM(vocab_size=1000, seq_len=64, global_batch=4, seed=9)
+    b = SyntheticLM(vocab_size=1000, seq_len=64, global_batch=4, seed=9)
+    np.testing.assert_array_equal(a.batch(17)["tokens"], b.batch(17)["tokens"])
+    assert not np.array_equal(a.batch(17)["tokens"], a.batch(18)["tokens"])
+    assert a.batch(3)["tokens"].max() < 1000
+    assert (a.batch(3)["tokens"][:, 0] == 0).all()
+
+
+# -- sharding rules -------------------------------------------------------------------
+
+def _fake_mesh(**shape):
+    return types.SimpleNamespace(shape=shape)
+
+
+def test_param_spec_rules():
+    mesh = _fake_mesh(data=16, model=16)
+    P = specs.param_spec
+    assert tuple(P("embed/tok", (100352, 6144), mesh)) == ("model", "data")
+    assert tuple(P("groups/0/0/attn/wq", (40, 6144, 48, 128), mesh)) == (
+        None, "data", "model", None)
+    # whisper: 12 heads don't divide 16 -> replicate head dim
+    assert tuple(P("groups/0/0/attn/wq", (12, 768, 12, 64), mesh)) == (
+        None, "data", None, None)
+    assert tuple(P("groups/0/0/mlp/w_in", (40, 6144, 21504), mesh)) == (
+        None, "data", "model")
+    assert tuple(P("groups/0/0/moe/w_in", (40, 16, 6144, 21504), mesh)) == (
+        None, "model", "data", None)
+    # norms replicate
+    assert tuple(P("groups/0/0/ln1/scale", (40, 6144), mesh)) == (None, None)
+
+
+def test_param_spec_no_fsdp():
+    mesh = _fake_mesh(data=16, model=16)
+    sp = specs.param_spec("embed/tok", (100352, 6144), mesh, fsdp=False)
+    assert tuple(sp) == ("model", None)
+
+
+def test_tp_adapt_kv_expansion():
+    from repro.configs import get_config
+
+    cfg, r = specs.tp_adapt(get_config("llama3.2-1b"), 16)
+    assert cfg.n_kv_heads == 16  # 8 -> expanded
+    assert r == 1
+    cfg, r = specs.tp_adapt(get_config("mixtral-8x22b"), 16)
+    assert cfg.n_kv_heads == 16 and r == 2  # 8 experts on 16-way axis
+    cfg, r = specs.tp_adapt(get_config("dbrx-132b"), 16)
+    assert r == 1  # 16 experts tile exactly
+    cfg, r = specs.tp_adapt(get_config("whisper-small"), 16)
+    assert cfg.n_kv_heads == 12  # 12 heads unshardable -> untouched
+    cfg, r = specs.tp_adapt(get_config("recurrentgemma-9b"), 16)
+    assert cfg.n_kv_heads == 16  # MQA 1 -> 16 copies
+    cfg, r = specs.tp_adapt(get_config("codeqwen1.5-7b"), 16)
+    assert cfg.n_kv_heads == 32  # divides directly, no expansion
+
+
+# -- optimizer / schedule -----------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = init_state(p)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = jax.tree.map(lambda w: 2 * w, p)
+        p, st = apply_updates(cfg, p, g, st)
+    assert float(jnp.abs(p["w"]).max()) < 0.15
+
+
+def test_warmup_cosine_shape():
+    lr0 = float(warmup_cosine(0, peak_lr=1.0, warmup_steps=10, total_steps=100))
+    lr10 = float(warmup_cosine(10, peak_lr=1.0, warmup_steps=10, total_steps=100))
+    lr100 = float(warmup_cosine(100, peak_lr=1.0, warmup_steps=10, total_steps=100))
+    assert lr0 == 0.0 and lr10 == pytest.approx(1.0) and lr100 == pytest.approx(0.1)
