@@ -101,6 +101,30 @@ def fig5_crossovers() -> bool:
     return ns is not None and ns <= 10 and nl is not None and 10 < nl <= 150
 
 
+def registry_crossovers() -> bool:
+    """Fig 5 crossovers for every registered GPU-family machine — the
+    registry regression oracle plus the GH200-like extensibility entry."""
+    from repro.core import get_machine, registered_machines
+
+    print("# registry: message-count crossovers at 1 KiB, per machine")
+    values = {}
+    for name in registered_machines():
+        spec = get_machine(name)
+        if "three_step" not in spec.paths:
+            continue  # not a staged-family machine (e.g. tpu factory entry)
+        class _T:
+            machine = name
+        values[name] = message_count_crossover(_T(), 1024.0, max_msgs=512)
+        print(f"registry,{name},crossover_n={values[name]}")
+    ok = (
+        values.get("summit") is not None and values["summit"] <= 10
+        and values.get("lassen") is not None and 10 < values["lassen"] <= 150
+        and "gh200" in values
+    )
+    registry_crossovers.last_values = values  # run.py exports these to JSON
+    return ok
+
+
 def fig6_collectives() -> bool:
     print("# fig6: Alltoallv strategy ranking, 32 nodes")
     ok = True
@@ -124,5 +148,6 @@ ALL = [
     fig3_single_message,
     fig4_ppn_scaling,
     fig5_crossovers,
+    registry_crossovers,
     fig6_collectives,
 ]

@@ -1,18 +1,31 @@
 """Benchmark harness: one section per paper table/figure + TPU adaptation +
 roofline summary.  Exits non-zero if a reproduced claim fails.
 
-    PYTHONPATH=src python -m benchmarks.run
+Writes ``BENCH_paper_models.json`` (per-section pass/fail + the key
+crossover numbers) next to the repo root so the perf trajectory is
+machine-trackable across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run [--json PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_paper_models.json")
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="where to write the machine-readable report")
+    args = ap.parse_args(argv)
+
     from benchmarks import paper_models, tpu_planner
 
     results = {}
@@ -45,7 +58,23 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         print(f"# roofline summary failed: {e}")
 
-    print(f"\n== benchmark summary ({time.time()-t0:.1f}s) ==")
+    elapsed = time.time() - t0
+    crossovers = getattr(paper_models.registry_crossovers, "last_values", {})
+    report = {
+        "elapsed_seconds": round(elapsed, 2),
+        "sections": results,
+        "crossovers_1KiB": crossovers,
+        "ok": all(results.values()),
+    }
+    try:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {os.path.relpath(args.json)}")
+    except OSError as e:
+        print(f"# could not write {args.json}: {e}")
+
+    print(f"\n== benchmark summary ({elapsed:.1f}s) ==")
     for name, ok in results.items():
         print(f"  {'PASS' if ok else 'FAIL'}  {name}")
     if not all(results.values()):

@@ -74,4 +74,32 @@ def measured_fit() -> bool:
     return res.fitted.alpha >= 0 and res.fitted.beta >= 0
 
 
-ALL = [crosspod_strategies, allreduce_strategy, moe_dispatch, measured_fit]
+def fitted_machine_plans() -> bool:
+    """Full §VI loop on live data: measure -> fit -> register -> plan.
+
+    The host<->device transfer stands in for the direct tier; the point is
+    that a machine born from measurements is planned by the same registry
+    machinery as the built-ins.
+    """
+    from repro.comms.autotune import select_transfer_path
+    from repro.core.benchmark import spec_from_measurements
+    from repro.core.machine import registered_machines
+    from repro.core.planner import plan_messages
+
+    print("# tpu: measured machine -> registry -> planner/autotune")
+    res = bench_host_device_roundtrip(sizes=(1 << 12, 1 << 16, 1 << 20))
+    spec = spec_from_measurements("fitted_live", res, injectors_per_node=1)
+    plan = plan_messages(spec, 65536.0, 4)
+    pick = select_transfer_path("fitted_live", 65536.0, 4)
+    print(f"tpu_fitted,registered={'fitted_live' in registered_machines()},"
+          f"plan={plan.strategy},autotune={pick},t={plan.predicted_time:.3e}s")
+    return (
+        "fitted_live" in registered_machines()
+        and plan.strategy == "gpudirect"
+        and pick == "gpudirect"
+        and plan.predicted_time > 0
+    )
+
+
+ALL = [crosspod_strategies, allreduce_strategy, moe_dispatch, measured_fit,
+       fitted_machine_plans]

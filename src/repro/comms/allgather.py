@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import jax
+
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -16,7 +18,7 @@ def all_gather_axis(x: jax.Array, mesh: Mesh, axis: str, dim: int = 0) -> jax.Ar
 
     # all_gather output IS replicated over `axis`, but the static
     # varying-axes checker cannot infer that through all_gather.
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh, in_specs=in_spec, out_specs=out_spec, check_vma=False
     )
     return fn(x)

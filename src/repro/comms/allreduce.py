@@ -27,6 +27,8 @@ import functools
 from typing import Sequence, Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -131,7 +133,7 @@ def allreduce_flat(x: jax.Array, mesh: Mesh, axes: Sequence[str]) -> jax.Array:
     k = _mesh_size(mesh, axes)
     _check_lead(x, k, "allreduce_flat")
     spec = P(axes, *([None] * (x.ndim - 1)))
-    fn = jax.shard_map(
+    fn = shard_map(
         _squeeze_body(functools.partial(allreduce_flat_inner, axes=axes)),
         mesh=mesh, in_specs=spec, out_specs=spec,
     )
@@ -147,7 +149,7 @@ def allreduce_hierarchical(
     _check_lead(x, k, "allreduce_hierarchical")
     fast_size = _mesh_size(mesh, fast_axes)
     spec = P(all_axes, *([None] * (x.ndim - 1)))
-    fn = jax.shard_map(
+    fn = shard_map(
         _squeeze_body(
             functools.partial(
                 allreduce_hier_inner,
@@ -165,7 +167,7 @@ def allreduce_ring(x: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
     k = mesh.shape[axis]
     _check_lead(x, k, "allreduce_ring")
     spec = P((axis,), *([None] * (x.ndim - 1)))
-    fn = jax.shard_map(
+    fn = shard_map(
         _squeeze_body(
             functools.partial(allreduce_ring_inner, axis=axis, axis_size=k)
         ),
@@ -185,7 +187,7 @@ def reduce_scatter(x: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
 
     in_spec = P((axis,), *([None] * (x.ndim - 1)))
     out_spec = in_spec
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
+    fn = shard_map(body, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
     return fn(x)
 
 

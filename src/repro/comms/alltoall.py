@@ -21,6 +21,8 @@ import functools
 from typing import Sequence, Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -87,7 +89,7 @@ def _wrap(body, mesh: Mesh, axes: Tuple[str, ...], x: jax.Array):
     def local(v):  # v: (1, k, *payload)
         return body(v[0])[None]
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
+    fn = shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
     return fn(x)
 
 

@@ -2,24 +2,87 @@
 
 This is where ``repro.core`` (the paper) meets ``repro.comms`` (the
 framework): given the mesh shape and payload, consult the performance models
-and return the strategy string the collective wrappers accept.  An optional
-measured-autotune path benchmarks the candidates live and records which one
-the model would have picked (model-vs-measurement is the paper's validation
-loop).
+and return the strategy string the collective wrappers accept.  Selection is
+machine-agnostic — every entry point takes a registry name (or a
+:class:`~repro.core.machine.MachineSpec`, e.g. one fitted live by
+:func:`repro.core.benchmark.spec_from_measurements`), defaulting to the
+deployment target.  An optional measured-autotune path benchmarks the
+candidates live and records which one the model would have picked
+(model-vs-measurement is the paper's validation loop).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.machine import (
+    MachineSpec,
+    machine_for,
+    plan_costs,
+    resolve_spec,
+    simulate_strategies,
+)
+from repro.core.params import Locality
 from repro.core.planner import plan_ep_dispatch, plan_tpu_allreduce, plan_tpu_crosspod, Plan
 from repro.core.topology import TpuPodTopology
 
+# Registry name of the machine this deployment runs on; selectors use it
+# when no machine is given.  Point it at a fitted spec to let live
+# measurements drive every subsequent planning decision.  The mesh-shaped
+# selectors additionally require the machine to declare the TPU path family
+# (direct/staged/multirail); others fall back to the deployment default.
+_DEFAULT_MACHINE = "tpu_v5e"
+_ACTIVE_MACHINE: str = _DEFAULT_MACHINE
 
-def _topo_from_mesh_shape(mesh_shape: Dict[str, int]) -> TpuPodTopology:
+
+def set_active_machine(name: str) -> str:
+    """Switch the default machine the selectors consult (returns the old)."""
+    global _ACTIVE_MACHINE
+    old, _ACTIVE_MACHINE = _ACTIVE_MACHINE, name
+    return old
+
+
+def active_machine() -> str:
+    return _ACTIVE_MACHINE
+
+
+def _resolve(machine: Union[str, MachineSpec, None]) -> MachineSpec:
+    return resolve_spec(machine, default=_ACTIVE_MACHINE)
+
+
+def select_transfer_path(
+    machine: Union[str, MachineSpec, None],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    locality: Locality = Locality.OFF_NODE,
+) -> str:
+    """Best declared path variant for a message batch on ANY registered
+    machine — the §V decision (GPUDirect vs 3-step / direct vs staged),
+    driven purely by the machine's spec."""
+    costs = plan_costs(_resolve(machine), nbytes_per_msg, n_msgs, locality=locality)
+    return min(costs, key=costs.get)
+
+
+def select_collective_strategy(
+    machine: Union[str, MachineSpec, None],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    split_messages: bool = False,
+) -> str:
+    """Best declared collective strategy (the §VI decision) for ANY
+    registered machine, including live-fitted ones."""
+    costs = simulate_strategies(
+        _resolve(machine), nbytes_per_msg, n_msgs, split_messages=split_messages
+    )
+    return min(costs, key=costs.get)
+
+
+def _topo_from_mesh_shape(
+    mesh_shape: Dict[str, int], machine: Optional[str] = None
+) -> TpuPodTopology:
     pods = mesh_shape.get("pod", 1)
     inner = 1
     for name, size in mesh_shape.items():
@@ -29,14 +92,23 @@ def _topo_from_mesh_shape(mesh_shape: Dict[str, int]) -> TpuPodTopology:
     x = int(np.floor(np.sqrt(inner)))
     while inner % x:
         x -= 1
-    return TpuPodTopology(pods=pods, torus_x=x, torus_y=inner // x)
+    topo = TpuPodTopology(
+        pods=pods, torus_x=x, torus_y=inner // x,
+        machine=machine or _ACTIVE_MACHINE,
+    )
+    if "direct" not in machine_for(topo).paths:
+        # the named machine is not a TPU-family spec (e.g. a fitted GPU-style
+        # machine set as active): mesh-shaped planning needs the pod paths,
+        # so fall back to the deployment default.
+        topo = dataclasses.replace(topo, machine=_DEFAULT_MACHINE)
+    return topo
 
 
 def select_allreduce_strategy(
-    mesh_shape: Dict[str, int], bytes_per_chip: float
+    mesh_shape: Dict[str, int], bytes_per_chip: float, machine: Optional[str] = None
 ) -> str:
     """flat vs hierarchical gradient all-reduce, from the models."""
-    topo = _topo_from_mesh_shape(mesh_shape)
+    topo = _topo_from_mesh_shape(mesh_shape, machine)
     if topo.pods == 1:
         return "flat"  # no slow tier to stage around
     plan = plan_tpu_allreduce(topo, bytes_per_chip)
@@ -48,11 +120,12 @@ def select_alltoall_strategy(
     bytes_per_chip: float,
     n_msgs: int = 1,
     crosses_pod: bool = False,
+    machine: Optional[str] = None,
 ) -> str:
     """direct vs hierarchical all-to-all (MoE dispatch), from the models."""
     if not crosses_pod or mesh_shape.get("pod", 1) == 1:
         return "direct"
-    topo = _topo_from_mesh_shape(mesh_shape)
+    topo = _topo_from_mesh_shape(mesh_shape, machine)
     plan = plan_tpu_crosspod(topo, bytes_per_chip, n_msgs=n_msgs)
     return {"direct": "direct", "staged": "hierarchical", "multirail": "hierarchical"}[
         plan.strategy
@@ -63,6 +136,7 @@ def select_moe_dispatch_strategy(
     mesh_shape: Dict[str, int],
     ep_axes,
     bytes_per_bucket: float,
+    machine: Optional[str] = None,
 ) -> str:
     """direct vs hierarchical two-hop dispatch for the MoE a2a, from the
     postal models.  Single-axis EP is always direct; 2-axis groups follow
@@ -70,7 +144,7 @@ def select_moe_dispatch_strategy(
     small-message staging)."""
     if len(ep_axes) < 2:
         return "direct"
-    topo = _topo_from_mesh_shape(mesh_shape)
+    topo = _topo_from_mesh_shape(mesh_shape, machine)
     sizes = tuple(mesh_shape[a] for a in ep_axes)
     plan = plan_ep_dispatch(topo, bytes_per_bucket, sizes)  # type: ignore[arg-type]
     return plan.strategy

@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -18,7 +20,7 @@ def ring_shift(x: jax.Array, mesh: Mesh, axis: str, shift: int = 1) -> jax.Array
     def body(v):
         return jax.lax.ppermute(v, axis, perm)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
+    fn = shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
     return fn(x)
 
 
@@ -45,5 +47,5 @@ def halo_exchange(x: jax.Array, mesh: Mesh, axis: str, halo: int) -> jax.Array:
         from_right = jax.lax.ppermute(left_edge, axis, bwd)  # my right halo
         return jnp.concatenate([from_left, blk, from_right], axis=0)[None]
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
+    fn = shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
     return fn(x)

@@ -1,0 +1,25 @@
+"""Version-portability shims for jax API moves.
+
+The deployment images pin different jax versions (0.4.x in CI containers,
+newer on TPU pods); these aliases keep one code path:
+
+  * ``shard_map`` — ``jax.shard_map`` once it graduated, else the
+    ``jax.experimental.shard_map`` original; the renamed ``check_vma``
+    kwarg is translated to the old ``check_rep`` when needed.
+"""
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, *args, **kwargs)

@@ -5,12 +5,15 @@ Layers:
   params    — measured constants (paper Tables I-III) + TPU v5e target specs
   postal    — Eq. (1): segmented postal models
   maxrate   — Eq. (2)/(3): injection caps & multi-message costs
+  machine   — MachineSpec/TransportTier registry: declarative machines,
+              generic path/strategy evaluation (DESIGN.md §3)
   topology  — Summit/Lassen nodes and TPU pod tori
-  paths     — GPUDirect vs 3-step; TPU direct/staged/multirail paths
+  paths     — path costs (GPUDirect vs 3-step; TPU direct/staged/multirail)
   fitting   — least-squares (re)fitting of all model parameters
   simulate  — collective strategy cost simulation (paper §VI)
   planner   — strategy selection consumed by repro.comms
-  benchmark — live measurement harness feeding `fitting`
+  benchmark — live measurement harness feeding `fitting`; fitted machines
+              register via `spec_from_measurements` and plan like built-ins
 """
 from repro.core.params import (
     CopyDirection,
@@ -45,6 +48,21 @@ from repro.core.topology import (
     TWO_POD_V5E,
     TpuPodTopology,
 )
+from repro.core.machine import (
+    MachineSpec,
+    Path,
+    StrategyDecl,
+    TransportTier,
+    Traversal,
+    get_machine,
+    machine_for,
+    path_time,
+    plan_costs,
+    register_machine,
+    registered_machines,
+    simulate_strategies,
+    strategy_time,
+)
 from repro.core.paths import (
     TpuPathModels,
     gpudirect_time,
@@ -57,6 +75,7 @@ from repro.core.planner import (
     message_count_crossover,
     plan_gpu_collective,
     plan_gpu_messages,
+    plan_messages,
     plan_moe_alltoall,
     plan_tpu_allreduce,
     plan_tpu_crosspod,

@@ -4,16 +4,29 @@ On real TPU/GPU hardware these functions measure the actual transport tiers;
 in this container they exercise the identical code path against host-level
 transfers (device_put round-trips and jitted collectives on CPU devices), so
 the fit -> model -> plan pipeline is tested end-to-end.
+
+:func:`spec_from_measurements` closes the loop the paper draws in §VI:
+measured tiers become a registered :class:`~repro.core.machine.MachineSpec`,
+so a live-fitted machine plans (``repro.core.planner``) and autotunes
+(``repro.comms.autotune``) exactly like the built-in table-driven entries.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.fitting import fit_postal
+from repro.core.fitting import fit_postal, fit_transport_model
+from repro.core.machine import (
+    MachineSpec,
+    TransportTier,
+    gpu_family_paths,
+    gpu_family_strategies,
+    gpu_plan_variants,
+    register_machine,
+)
 from repro.core.params import PostalParams
 
 
@@ -86,6 +99,8 @@ def bench_jitted_allreduce(
     import jax.numpy as jnp
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+    from repro.compat import shard_map
+
     devs = jax.devices()
     if len(devs) < n_devices:
         raise RuntimeError(f"need {n_devices} devices, have {len(devs)}")
@@ -105,9 +120,112 @@ def bench_jitted_allreduce(
 
     @jax.jit
     def psum_all(x):
-        return jax.shard_map(
+        return shard_map(
             lambda v: jax.lax.psum(v, "x"), mesh=mesh, in_specs=P("x", None), out_specs=P(None, None)
         )(x)
 
     run(psum_all, "allreduce_flat")
     return results
+
+
+# --------------------------------------------------------------------------
+# Measurements -> registered machine (the paper's §VI loop, closed).
+# --------------------------------------------------------------------------
+
+Samples = Union["BenchResult", Tuple[Sequence[float], Sequence[float]]]
+
+
+def _samples(data: Samples) -> Tuple[Sequence[float], Sequence[float]]:
+    if isinstance(data, BenchResult):
+        return data.sizes, data.times
+    sizes, times = data
+    return sizes, times
+
+
+def spec_from_measurements(
+    name: str,
+    direct_net: Samples,
+    *,
+    staged_net: Optional[Samples] = None,
+    copy_d2h: Optional[Samples] = None,
+    copy_h2d: Optional[Samples] = None,
+    direct_beta_N: Optional[float] = None,
+    staged_beta_N: Optional[float] = None,
+    injectors_per_node: int = 1,
+    lanes_per_injector: int = 1,
+    thresholds=None,
+    register: bool = True,
+) -> MachineSpec:
+    """Build (and by default register) a MachineSpec from measured tiers.
+
+    * ``direct_net`` — ping-pong (size, time) samples of the direct
+      device-to-device path (the GPUDirect analogue).
+    * ``staged_net`` + ``copy_d2h``/``copy_h2d`` — the staging network tier
+      and the host<->device copy tiers; when all three are present the spec
+      also declares the 3-step family (``three_step``/``extra_msg``/
+      ``dup_devptr``) and the Fig-5 crossover becomes measurable.
+    * ``direct_beta_N``/``staged_beta_N`` — injection caps, e.g. from
+      :func:`repro.core.fitting.fit_maxrate_beta_N` on a ppn sweep (NaN is
+      treated as "cap never reached").
+    * ``injectors_per_node``/``lanes_per_injector`` — shape facts: devices
+      injecting per node, and staging lanes (CPU cores) per device.
+    * ``thresholds`` — protocol switch points for the net tiers: a
+      ``(short_max, eager_max)`` pair, ``"detect"``, or None (one segment);
+      see :func:`repro.core.fitting.fit_transport_model`.
+
+    The result plans and simulates through the exact code paths the
+    built-in machines use — registry in, planner out.
+    """
+    def cap(v: Optional[float]) -> Optional[float]:
+        return None if v is None or (isinstance(v, float) and np.isnan(v)) else v
+
+    staged_family = staged_net is not None and copy_d2h is not None and copy_h2d is not None
+    tiers: Dict[str, TransportTier] = {
+        "gpu_net": TransportTier(
+            name="gpu_net",
+            model=fit_transport_model(*_samples(direct_net), thresholds=thresholds),
+            beta_N=cap(direct_beta_N),
+            width=injectors_per_node,
+        ),
+    }
+    if staged_family:
+        tiers["cpu_net"] = TransportTier(
+            name="cpu_net",
+            model=fit_transport_model(*_samples(staged_net), thresholds=thresholds),
+            beta_N=cap(staged_beta_N),
+            width=lanes_per_injector,
+        )
+        for tier_name, data in (("copy_d2h", copy_d2h), ("copy_h2d", copy_h2d)):
+            tiers[tier_name] = TransportTier(
+                name=tier_name,
+                model=fit_transport_model(*_samples(data), thresholds=None),
+                width=lanes_per_injector,
+                serialize_alpha=True,
+            )
+    paths = gpu_family_paths()
+    strategies = gpu_family_strategies()
+    variants = gpu_plan_variants()
+    if not staged_family:
+        paths = {"gpudirect": paths["gpudirect"]}
+        strategies = {"cuda_aware": strategies["cuda_aware"]}
+        variants = {"gpudirect": variants["gpudirect"]}
+    spec = MachineSpec(
+        name=name,
+        tiers=tiers,
+        paths=paths,
+        strategies=strategies,
+        plan_variants=variants,
+        facts={
+            "gpus_per_node": injectors_per_node,
+            "cpu_cores_per_node": injectors_per_node * lanes_per_injector,
+            "cores_per_gpu": lanes_per_injector,
+            "injectors_per_node": injectors_per_node,
+        },
+        crossover_paths=("gpudirect", "three_step") if staged_family
+        else ("gpudirect", "gpudirect"),
+        description=f"fitted from measurements ({len(_samples(direct_net)[0])} "
+                    f"direct-net samples)",
+    )
+    if register:
+        register_machine(name, spec)
+    return spec

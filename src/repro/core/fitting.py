@@ -57,6 +57,29 @@ def fit_segmented(
     return SegmentedPostalModel(segments=segs, short_max=short_max, eager_max=eager_max)
 
 
+def fit_transport_model(
+    sizes: Sequence[float],
+    times: Sequence[float],
+    thresholds: "Tuple[float, float] | str | None" = None,
+):
+    """Fit a tier model from ping-pong samples.
+
+    ``thresholds``: a (short_max, eager_max) pair fits one postal segment
+    per protocol window; ``"detect"`` locates the switch points with
+    :func:`detect_breakpoints` first; ``None`` fits a single segment
+    (:class:`repro.core.postal.SimplePostalModel`).
+    """
+    from repro.core.postal import SimplePostalModel
+
+    if thresholds == "detect":
+        bps = detect_breakpoints(sizes, times)
+        thresholds = (bps[0], bps[1]) if len(bps) >= 2 else None
+    if thresholds is None:
+        return SimplePostalModel(fit_postal(sizes, times))
+    short_max, eager_max = thresholds
+    return fit_segmented(sizes, times, short_max, eager_max)
+
+
 def detect_breakpoints(
     sizes: Sequence[float], times: Sequence[float], n_break: int = 2
 ) -> Tuple[float, ...]:

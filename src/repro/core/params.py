@@ -1,5 +1,10 @@
 """Measured model parameters, verbatim from the paper (Tables I, II, III).
 
+This module is pure data: the tables keyed by machine name.  The executable
+view of a machine — transport tiers, paths, strategies — is built from
+these tables by :mod:`repro.core.machine` and addressed through its
+registry; nothing outside that module should branch on machine names.
+
 Units:
   * ``alpha`` — seconds (per-message start-up latency).
   * ``beta``  — seconds per byte (inverse bandwidth).

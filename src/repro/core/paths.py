@@ -1,88 +1,85 @@
-"""Communication-path enumeration and cost composition (paper §III-§V).
+"""Communication-path cost composition (paper §III-§V), machine-agnostic.
 
-GPU machines (faithful reproduction):
+Every path is a :class:`repro.core.machine.Path` — an explicit composition
+of transport-tier traversals — evaluated by the generic
+:func:`repro.core.machine.path_time`.  The functions here are the stable
+public API; they resolve machines purely through the registry
+(:func:`get_machine` / :func:`machine_for`), so adding a machine is a
+registry entry, never an edit to this file.
 
-* ``gpudirect_time``    — CUDA-aware GPUDirect: one postal model (Table I GPU).
-* ``three_step_time``   — D2H memcpy + inter-CPU message(s) + H2D memcpy
-                          (Table II + Table I CPU), optionally split over all
-                          CPU cores per GPU and subject to the Table III
-                          injection cap.
+Named paths of the built-in families:
 
-TPU target (adaptation, same algebra):
-
-* ``tpu_direct_time``   — cross-pod transfer where each chip sends its own
-                          slice straight over DCN (GPUDirect analogue).
-* ``tpu_staged_time``   — gather to one host's chips over ICI, single DCN
-                          stream, scatter (3-step analogue).
-* ``tpu_multirail_time``— slice spread over all hosts so every NIC injects
-                          concurrently (Dup-Devptr analogue).
+* GPU machines: ``gpudirect`` (one postal hop on the GPU NIC tier) and
+  ``three_step`` (``copy_d2h -> cpu_net -> copy_h2d``, optionally split
+  over CPU cores, subject to the Table III injection cap).
+* TPU pods: ``direct`` (every chip injects over DCN), ``staged``
+  (``ici -> dcn -> ici``, the 3-step analogue), ``multirail`` (all host
+  NICs inject equal shares, the Dup-Devptr analogue).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
-from repro.core.maxrate import MaxRateParams, multi_message_time
-from repro.core.params import (
-    CopyDirection,
-    Locality,
-    TABLE_II,
-    TABLE_III_BETA_N,
-    TpuSystem,
-    TPU_V5E,
+from repro.core.machine import (
+    MachineSpec,
+    machine_for,
+    path_time,
+    resolve_spec as _spec,
 )
-from repro.core.postal import SegmentedPostalModel, paper_model
+from repro.core.maxrate import MaxRateParams
+from repro.core.params import CopyDirection, Locality
 from repro.core.topology import TpuPodTopology
 
 
 # --------------------------------------------------------------------------
-# Paper machines.
+# Tier-level helpers (kept for fitting/benchmarks; registry-backed).
 # --------------------------------------------------------------------------
 
-def gpu_maxrate(machine: str, locality: Locality, nbytes: float) -> MaxRateParams:
-    m = paper_model(machine, "gpu", locality)
-    p = m.params_for(nbytes)
-    return MaxRateParams(p.alpha, p.beta, TABLE_III_BETA_N[machine]["gpu"])
+def gpu_maxrate(machine, locality: Locality, nbytes: float) -> MaxRateParams:
+    """Max-rate params of the GPU NIC tier at one message size."""
+    return _spec(machine).resolve_tier("gpu_net", locality).maxrate(nbytes)
 
 
-def cpu_maxrate(machine: str, locality: Locality, nbytes: float) -> MaxRateParams:
-    m = paper_model(machine, "cpu", locality)
-    p = m.params_for(nbytes)
-    return MaxRateParams(p.alpha, p.beta, TABLE_III_BETA_N[machine]["cpu"])
+def cpu_maxrate(machine, locality: Locality, nbytes: float) -> MaxRateParams:
+    """Max-rate params of the CPU NIC tier at one message size."""
+    return _spec(machine).resolve_tier("cpu_net", locality).maxrate(nbytes)
 
 
-def memcpy_time(machine: str, direction: CopyDirection, nbytes, on_socket: bool = True) -> np.ndarray:
-    key = "on-socket" if on_socket else "off-socket"
-    return TABLE_II[machine][key][direction].time(np.asarray(nbytes, np.float64))
+_COPY_TIER = {CopyDirection.D2H: "copy_d2h", CopyDirection.H2D: "copy_h2d"}
 
+
+def memcpy_time(machine, direction: CopyDirection, nbytes, on_socket: bool = True) -> np.ndarray:
+    """Copy-tier postal time (Table II on the paper machines)."""
+    socket = "on-socket" if on_socket else "off-socket"
+    tier = _spec(machine).resolve_tier(_COPY_TIER[direction], socket=socket)
+    return tier.time(np.asarray(nbytes, np.float64))
+
+
+# --------------------------------------------------------------------------
+# Path costs.
+# --------------------------------------------------------------------------
 
 def gpudirect_time(
-    machine: str,
+    machine,
     nbytes_per_msg,
     n_msgs=1,
     ppn_gpus: int = 1,
     locality: Locality = Locality.OFF_NODE,
 ) -> np.ndarray:
-    """CUDA-aware GPUDirect path, Eq. (3) with the inter-GPU injection cap.
+    """Direct device-NIC path, Eq. (3) with the inter-GPU injection cap.
 
     ``ppn_gpus`` = GPUs per node actively injecting (6 on Summit, 4 Lassen).
     """
-    s = np.asarray(nbytes_per_msg, np.float64)
-    out = np.zeros(np.broadcast(s, np.asarray(n_msgs, np.float64)).shape)
-    # protocol segment depends on message size -> evaluate pointwise on the
-    # flattened broadcast; sizes are usually few, this is cheap.
-    s_b, n_b = np.broadcast_arrays(s, np.asarray(n_msgs, np.float64))
-    flat = np.empty(s_b.size)
-    for i, (si, ni) in enumerate(zip(s_b.flat, n_b.flat)):
-        params = gpu_maxrate(machine, locality, float(si))
-        flat[i] = multi_message_time(params, float(si), float(ni), ppn_gpus)
-    return flat.reshape(s_b.shape) if s_b.shape else np.float64(flat[0])
+    return path_time(
+        _spec(machine), "gpudirect", nbytes_per_msg, n_msgs,
+        concurrency=ppn_gpus, locality=locality,
+    )
 
 
 def three_step_time(
-    machine: str,
+    machine,
     nbytes_per_msg,
     n_msgs=1,
     cores_per_gpu: int = 1,
@@ -95,89 +92,61 @@ def three_step_time(
 
     * The memcpy is paid once for the union of the data (``dedup_factor`` < 1
       models duplicated values across messages: copied bytes = total/dedup).
-    * ``cores_per_gpu`` CPU cores split the bytes (and, for point-to-point
-      patterns, the messages) — paper §IV/§VI.
+    * ``cores_per_gpu`` CPU cores split the bytes — paper §IV/§VI.
     * ``ppn_gpus`` GPUs per node each feed their own core group; the CPU
       injection cap sees ppn = cores_per_gpu * ppn_gpus active processes.
     """
-    s_b, n_b = np.broadcast_arrays(
-        np.asarray(nbytes_per_msg, np.float64), np.asarray(n_msgs, np.float64)
+    return path_time(
+        _spec(machine), "three_step", nbytes_per_msg, n_msgs,
+        lanes=cores_per_gpu, concurrency=ppn_gpus, locality=locality,
+        socket="on-socket" if on_socket_copy else "off-socket",
+        dedup_factor=dedup_factor,
     )
-    ppn_cpu = cores_per_gpu * ppn_gpus
-    flat = np.empty(s_b.size)
-    for i, (si, ni) in enumerate(zip(s_b.flat, n_b.flat)):
-        total = si * ni
-        copy_bytes = total * dedup_factor
-        d2h = memcpy_time(machine, CopyDirection.D2H, copy_bytes, on_socket_copy)
-        h2d = memcpy_time(machine, CopyDirection.H2D, copy_bytes, on_socket_copy)
-        # per-core share
-        s_core = si / cores_per_gpu
-        params = cpu_maxrate(machine, locality, s_core)
-        send = multi_message_time(params, s_core, ni, ppn_cpu)
-        flat[i] = float(d2h) + float(send) + float(h2d)
-    return flat.reshape(s_b.shape) if s_b.shape else np.float64(flat[0])
 
 
 # --------------------------------------------------------------------------
-# TPU target.
+# TPU adapter (back-compat facade over the registry spec for a topology).
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class TpuPathModels:
-    """Postal/max-rate building blocks for a TPU topology."""
+    """Path costs for a TPU topology, resolved through the registry."""
 
     topo: TpuPodTopology
 
     @property
-    def sys(self) -> TpuSystem:
+    def spec(self) -> MachineSpec:
+        return machine_for(self.topo)
+
+    @property
+    def sys(self):
         return self.topo.system
 
     def ici_time(self, nbytes, hops: int = 1, links: int = 1) -> np.ndarray:
         """Move nbytes over `links` parallel ICI links, `hops` hops deep."""
+        tier = self.spec.resolve_tier("ici")
+        p = tier.params_for(0.0)
         s = np.asarray(nbytes, np.float64)
-        alpha = self.sys.ici_alpha + self.sys.ici_hop_alpha * max(hops - 1, 0)
-        return alpha + s * self.sys.ici_beta / links
+        alpha = p.alpha + self.spec.fact("ici_hop_alpha") * max(hops - 1, 0)
+        return alpha + s * p.beta / links
 
     def dcn_params(self, hosts_injecting: int) -> MaxRateParams:
-        """Max-rate params for cross-pod DCN with k hosts injecting.
-
-        beta_p is the single-host NIC cost; the *pod-aggregate* cap beta_N is
-        spread over the injecting hosts exactly like the paper's NIC cap over
-        CPU cores.
-        """
-        return MaxRateParams(
-            alpha=self.sys.dcn_alpha,
-            beta_p=self.sys.dcn_beta_per_host,
-            beta_N=self.sys.dcn_beta_N_pod,
-        )
+        """Max-rate params for cross-pod DCN; the *pod-aggregate* cap beta_N
+        is spread over the injecting hosts exactly like the paper's NIC cap
+        over CPU cores."""
+        return self.spec.resolve_tier("dcn").maxrate(0.0)
 
     def tpu_direct_time(self, nbytes_per_chip, n_msgs=1) -> np.ndarray:
         """Every chip sends its slice cross-pod: all hosts inject, but each
         message is small, and each of n_msgs pays the DCN latency."""
-        params = self.dcn_params(self.topo.hosts_per_pod)
-        ppn = self.topo.hosts_per_pod
-        return multi_message_time(params, np.asarray(nbytes_per_chip, np.float64), n_msgs, ppn)
+        return path_time(self.spec, "direct", nbytes_per_chip, n_msgs)
 
     def tpu_staged_time(self, nbytes_per_chip, n_msgs=1) -> np.ndarray:
         """Gather the pod's payload to one host's chips over ICI, send one
         DCN stream, scatter on the far side (3-step analogue)."""
-        s = np.asarray(nbytes_per_chip, np.float64)
-        total = s * self.topo.chips_per_pod * np.asarray(n_msgs, np.float64)
-        # ICI gather/scatter: limited by the 4 links into the staging chips.
-        gather = self.ici_time(total, hops=self.topo.torus_x // 2, links=self.sys.ici_links_per_chip)
-        params = self.dcn_params(1)
-        send = multi_message_time(params, total, 1, 1)
-        return gather + send + gather  # gather + DCN + scatter
+        return path_time(self.spec, "staged", nbytes_per_chip, n_msgs)
 
     def tpu_multirail_time(self, nbytes_per_chip, n_msgs=1) -> np.ndarray:
         """Slice re-bucketed so all hosts inject equal shares of ONE logical
-        message (Dup-Devptr analogue): latency paid once per rail, bandwidth
-        saturates the pod NIC aggregate, plus a cheap neighbourhood ICI
-        re-bucketing step."""
-        s = np.asarray(nbytes_per_chip, np.float64)
-        total = s * self.topo.chips_per_pod * np.asarray(n_msgs, np.float64)
-        rails = self.topo.hosts_per_pod
-        rebucket = self.ici_time(s * np.asarray(n_msgs, np.float64), hops=2, links=self.sys.ici_links_per_chip)
-        params = self.dcn_params(rails)
-        send = multi_message_time(params, total / rails, 1, rails)
-        return rebucket + send + rebucket
+        message (Dup-Devptr analogue)."""
+        return path_time(self.spec, "multirail", nbytes_per_chip, n_msgs)

@@ -1,23 +1,36 @@
 """Model-driven communication planner — the paper's optimization, as an API.
 
-Given a logical collective (kind, payload, message structure) and a topology,
-the planner evaluates every implementable strategy with the performance
-models and returns a ranked plan.  ``comms/`` consumes the decision to pick
-a shard_map lowering; the GPU-machine path reproduces the paper's §V/§VI
-decisions (3-step vs GPUDirect crossovers) exactly.
+Given a logical collective (kind, payload, message structure) and a
+topology, the planner evaluates every implementable strategy with the
+performance models and returns a ranked plan.  ``comms/`` consumes the
+decision to pick a shard_map lowering.
+
+The planner is machine-agnostic: it asks the registry
+(:mod:`repro.core.machine`) for the topology's :class:`MachineSpec` and
+ranks that spec's declared planning variants / strategies with the generic
+evaluators.  The paper machines reproduce the §V/§VI decisions (3-step vs
+GPUDirect crossovers) exactly; a machine fitted live by
+:func:`repro.core.benchmark.spec_from_measurements` plans the same way.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import simulate
+from repro.core.machine import (
+    MachineSpec,
+    machine_for,
+    path_time,
+    plan_costs,
+    resolve_spec as _spec,
+)
 from repro.core.params import Locality
-from repro.core.paths import gpudirect_time, three_step_time, TpuPathModels
+from repro.core.paths import TpuPathModels
 from repro.core.topology import GpuNodeTopology, TpuPodTopology
 
 
@@ -51,8 +64,26 @@ def _mk_plan(costs: Dict[str, float]) -> Plan:
 
 
 # --------------------------------------------------------------------------
-# Paper machines: GPUDirect vs 3-step (single core / all cores).
+# Message-level planning: rank the machine's declared path variants.
 # --------------------------------------------------------------------------
+
+def plan_messages(
+    machine: Union[str, MachineSpec],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    locality: Locality = Locality.OFF_NODE,
+    dedup_factor: float = 1.0,
+) -> Plan:
+    """Choose the path for n messages of s bytes from one device (paper §V),
+    for ANY registered machine (built-in, GH200-like, or live-fitted)."""
+    spec = _spec(machine)
+    return _mk_plan(
+        plan_costs(
+            spec, nbytes_per_msg, n_msgs,
+            locality=locality, dedup_factor=dedup_factor,
+        )
+    )
+
 
 def plan_gpu_messages(
     topo: GpuNodeTopology,
@@ -61,39 +92,36 @@ def plan_gpu_messages(
     locality: Locality = Locality.OFF_NODE,
     dedup_factor: float = 1.0,
 ) -> Plan:
-    """Choose the path for n messages of s bytes from one GPU (paper §V)."""
-    m = topo.machine
-    g = topo.gpus_per_node
-    costs = {
-        "gpudirect": float(gpudirect_time(m, nbytes_per_msg, n_msgs, g, locality)),
-        "three_step_1core": float(
-            three_step_time(m, nbytes_per_msg, n_msgs, 1, g, locality=locality, dedup_factor=dedup_factor)
-        ),
-        "three_step_allcores": float(
-            three_step_time(
-                m, nbytes_per_msg, n_msgs, topo.cores_per_gpu, g, locality=locality, dedup_factor=dedup_factor
-            )
-        ),
-    }
-    return _mk_plan(costs)
+    """Topology-flavoured :func:`plan_messages` (kept for the paper API)."""
+    return plan_messages(
+        machine_for(topo), nbytes_per_msg, n_msgs,
+        locality=locality, dedup_factor=dedup_factor,
+    )
 
 
 def message_count_crossover(
-    topo: GpuNodeTopology,
+    topo,
     nbytes_per_msg: float,
     max_msgs: int = 1024,
     cores_per_gpu: int = 1,
 ) -> Optional[int]:
-    """Smallest message count at which the 3-step path beats GPUDirect
-    (paper Fig 5: ~10 on Summit, ~100 on Lassen)."""
-    m = topo.machine
-    g = topo.gpus_per_node
-    for n in range(1, max_msgs + 1):
-        direct = float(gpudirect_time(m, nbytes_per_msg, n, g))
-        staged = float(three_step_time(m, nbytes_per_msg, n, cores_per_gpu, g))
-        if staged < direct:
-            return n
-    return None
+    """Smallest message count at which the staged path beats the direct path
+    (paper Fig 5: ~10 on Summit, ~100 on Lassen at 1 KiB).
+
+    One vectorized evaluation over the whole n grid — both path costs
+    broadcast over ``n_msgs``.
+    """
+    spec = machine_for(topo)
+    direct_path, staged_path = spec.crossover_paths
+    conc = int(spec.fact("injectors_per_node", 1))
+    ns = np.arange(1, max_msgs + 1, dtype=np.float64)
+    direct = path_time(spec, direct_path, nbytes_per_msg, ns, concurrency=conc)
+    staged = path_time(
+        spec, staged_path, nbytes_per_msg, ns,
+        lanes=cores_per_gpu, concurrency=conc,
+    )
+    hits = np.nonzero(np.asarray(staged) < np.asarray(direct))[0]
+    return int(hits[0]) + 1 if hits.size else None
 
 
 def plan_gpu_collective(
@@ -109,7 +137,7 @@ def plan_gpu_collective(
 
 
 # --------------------------------------------------------------------------
-# TPU: cross-pod strategy for mesh collectives.
+# TPU: cross-pod strategy for mesh collectives (same generic machinery).
 # --------------------------------------------------------------------------
 
 def plan_tpu_crosspod(
@@ -121,7 +149,6 @@ def plan_tpu_crosspod(
 
 def plan_tpu_allreduce(topo: TpuPodTopology, bytes_per_chip: float) -> Plan:
     """Gradient all-reduce: flat ring over all chips vs pod-hierarchical."""
-    sys = topo.system
     flat_axis = topo.total_chips
     flat = simulate.ring_allreduce_time(topo, bytes_per_chip, flat_axis)
     if topo.pods > 1:

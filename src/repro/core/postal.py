@@ -73,13 +73,16 @@ def paper_model(
 
 @dataclasses.dataclass(frozen=True)
 class SimplePostalModel:
-    """Single-segment postal model (used for the TPU tiers)."""
+    """Single-segment postal model (TPU tiers, memcpy tiers)."""
 
     params: PostalParams
 
     def time(self, nbytes) -> np.ndarray:
         s = np.asarray(nbytes, dtype=np.float64)
         return self.params.time(s)
+
+    def params_for(self, nbytes: float = 0.0) -> PostalParams:
+        return self.params
 
     def alpha(self, nbytes: float = 0.0) -> float:
         return self.params.alpha

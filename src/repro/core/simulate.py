@@ -1,34 +1,37 @@
-"""Collective strategy cost simulation — paper §VI (Fig 6) + TPU adaptation.
+"""Collective strategy cost simulation — paper §VI (Fig 6), machine-agnostic.
 
-Four strategies for an all-to-all among ``G = nodes * gpus_per_node`` GPUs,
-with per-pair message size ``s`` bytes:
+A strategy is a declared entry in a machine's :class:`MachineSpec` — a path
+(tier composition) plus its lane count — so simulating "every way to run
+this collective on this machine" is one generic loop over
+``spec.strategies``, evaluated by :func:`repro.core.machine.strategy_time`.
 
-1. CUDA-Aware   — each GPU GPUDirect-sends G-1 messages of s.
-2. 3-Step       — D2H copy of (G-1)*s, single CPU core per GPU sends G-1
-                  messages, H2D copy on the receiver.
-3. Extra-Msg    — D2H to one core, redistribute across ``c = cores_per_gpu``
-                  cores (the "extra messages"), each core runs the collective
-                  on s/c-sized pieces; gather back to one core; H2D.
-4. Dup-Devptr   — each of the c cores copies its own slice (D2H of (G-1)*s/c
-                  each, concurrent), each core sends its share directly.
+The GPU family declares the paper's four Alltoall lowerings:
+
+1. ``cuda_aware`` — each GPU direct-sends G-1 messages of s.
+2. ``three_step`` — D2H copy of (G-1)*s, single CPU core per GPU sends G-1
+                    messages, H2D copy on the receiver.
+3. ``extra_msg``  — D2H to one core, redistribute across the per-GPU core
+                    group (the "extra messages"), each core runs the
+                    collective on s/c-sized pieces; gather back; H2D.
+4. ``dup_devptr`` — each core copies its own slice (copy-engine launch
+                    latency serializes), each core sends its share.
+
+The TPU family declares ``direct`` / ``staged`` / ``multirail``.
 
 For MPI_Alltoall the per-core *message count stays G-1* (paper: "utilizing
 all CPU cores does not reduce the number of messages per process"); for the
-point-to-point MPI_Alltoallv pattern the per-core message count drops to
-(G-1)/c.
+point-to-point MPI_Alltoallv pattern (``split_messages=True``) it drops to
+(G-1)/c on the strategies whose traversals allow the split.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Dict
 
 import numpy as np
 
-from repro.core.maxrate import multi_message_time
-from repro.core.params import CopyDirection, Locality
-from repro.core.paths import cpu_maxrate, gpu_maxrate, memcpy_time
+from repro.core.machine import MachineSpec, machine_for, simulate_strategies, strategy_time
 from repro.core.topology import GpuNodeTopology, TpuPodTopology
-from repro.core.paths import TpuPathModels
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,78 +49,31 @@ class CollectiveProblem:
     def n_msgs(self) -> int:
         return self.n_gpus - 1
 
+    @property
+    def spec(self) -> MachineSpec:
+        return machine_for(self.topo)
+
 
 def _t(x) -> float:
     return float(np.asarray(x, np.float64))
 
 
-def cuda_aware_time(p: CollectiveProblem) -> float:
-    params = gpu_maxrate(p.topo.machine, Locality.OFF_NODE, p.msg_bytes)
-    return _t(multi_message_time(params, p.msg_bytes, p.n_msgs, p.topo.gpus_per_node))
-
-
-def three_step_collective_time(p: CollectiveProblem) -> float:
-    m = p.topo.machine
-    total = p.msg_bytes * p.n_msgs
-    d2h = _t(memcpy_time(m, CopyDirection.D2H, total))
-    h2d = _t(memcpy_time(m, CopyDirection.H2D, total))
-    params = cpu_maxrate(m, Locality.OFF_NODE, p.msg_bytes)
-    send = _t(multi_message_time(params, p.msg_bytes, p.n_msgs, p.topo.gpus_per_node))
-    return d2h + send + h2d
-
-
-def extra_msg_time(p: CollectiveProblem) -> float:
-    m = p.topo.machine
-    c = p.topo.cores_per_gpu
-    total = p.msg_bytes * p.n_msgs
-    # one D2H of everything, then redistribute (c-1 on-node messages of total/c)
-    d2h = _t(memcpy_time(m, CopyDirection.D2H, total))
-    h2d = _t(memcpy_time(m, CopyDirection.H2D, total))
-    on_node = cpu_maxrate(m, Locality.ON_NODE, total / c)
-    redist = _t(multi_message_time(on_node, total / c, c - 1, p.topo.cpu_cores_per_node))
-    # each core sends: message count unchanged for Alltoall, size / c.
-    s_core = p.msg_bytes / c
-    n_core = p.n_msgs if not p.split_messages else max(p.n_msgs / c, 1.0)
-    params = cpu_maxrate(m, Locality.OFF_NODE, s_core)
-    ppn = c * p.topo.gpus_per_node  # all cores of the node inject
-    send = _t(multi_message_time(params, s_core, n_core, ppn))
-    return d2h + redist + send + redist + h2d
-
-
-def dup_devptr_time(p: CollectiveProblem) -> float:
-    m = p.topo.machine
-    c = p.topo.cores_per_gpu
-    total = p.msg_bytes * p.n_msgs
-    # c concurrent memcpys of total/c each share ONE copy/DMA engine: the
-    # per-copy launch latency serializes (c * alpha) while the bandwidth
-    # term sees the full payload once.  This is the mechanism behind the
-    # paper's observed small-message overhead of Dup-Devptr (Fig 6, "large
-    # overhead associated with duplicate device pointers for very small
-    # messages") — see DESIGN.md §2.1.
-    d2h = c * _t(memcpy_time(m, CopyDirection.D2H, 0.0)) + (
-        _t(memcpy_time(m, CopyDirection.D2H, total)) - _t(memcpy_time(m, CopyDirection.D2H, 0.0))
+def strategy_cost(p: CollectiveProblem, strategy: str) -> float:
+    """One declared strategy's cost for this collective problem."""
+    return _t(
+        strategy_time(
+            p.spec, strategy, p.msg_bytes, p.n_msgs,
+            concurrency=p.topo.gpus_per_node, split_messages=p.split_messages,
+        )
     )
-    h2d = c * _t(memcpy_time(m, CopyDirection.H2D, 0.0)) + (
-        _t(memcpy_time(m, CopyDirection.H2D, total)) - _t(memcpy_time(m, CopyDirection.H2D, 0.0))
-    )
-    s_core = p.msg_bytes / c
-    n_core = p.n_msgs if not p.split_messages else max(p.n_msgs / c, 1.0)
-    params = cpu_maxrate(m, Locality.OFF_NODE, s_core)
-    ppn = c * p.topo.gpus_per_node
-    send = _t(multi_message_time(params, s_core, n_core, ppn))
-    return d2h + send + h2d
-
-
-STRATEGIES: Dict[str, Callable[[CollectiveProblem], float]] = {
-    "cuda_aware": cuda_aware_time,
-    "three_step": three_step_collective_time,
-    "extra_msg": extra_msg_time,
-    "dup_devptr": dup_devptr_time,
-}
 
 
 def simulate_all(p: CollectiveProblem) -> Dict[str, float]:
-    return {name: fn(p) for name, fn in STRATEGIES.items()}
+    """Every strategy the machine declares — the generic §VI simulator."""
+    return simulate_strategies(
+        p.spec, p.msg_bytes, p.n_msgs,
+        concurrency=p.topo.gpus_per_node, split_messages=p.split_messages,
+    )
 
 
 def best_strategy(p: CollectiveProblem) -> str:
@@ -125,8 +81,25 @@ def best_strategy(p: CollectiveProblem) -> str:
     return min(costs, key=costs.get)
 
 
+# Named helpers kept for direct use in notebooks/benchmarks.
+def cuda_aware_time(p: CollectiveProblem) -> float:
+    return strategy_cost(p, "cuda_aware")
+
+
+def three_step_collective_time(p: CollectiveProblem) -> float:
+    return strategy_cost(p, "three_step")
+
+
+def extra_msg_time(p: CollectiveProblem) -> float:
+    return strategy_cost(p, "extra_msg")
+
+
+def dup_devptr_time(p: CollectiveProblem) -> float:
+    return strategy_cost(p, "dup_devptr")
+
+
 # --------------------------------------------------------------------------
-# TPU cross-pod collective strategies (the adaptation used by comms/).
+# TPU cross-pod collective strategies (same generic simulator, TPU spec).
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -135,14 +108,13 @@ class TpuCollectiveProblem:
     bytes_per_chip: float  # payload each chip contributes
     n_msgs: int = 1  # logical messages per chip (e.g. experts, peers)
 
+    @property
+    def spec(self) -> MachineSpec:
+        return machine_for(self.topo)
+
 
 def tpu_strategy_costs(p: TpuCollectiveProblem) -> Dict[str, float]:
-    models = TpuPathModels(p.topo)
-    return {
-        "direct": _t(models.tpu_direct_time(p.bytes_per_chip, p.n_msgs)),
-        "staged": _t(models.tpu_staged_time(p.bytes_per_chip, p.n_msgs)),
-        "multirail": _t(models.tpu_multirail_time(p.bytes_per_chip, p.n_msgs)),
-    }
+    return simulate_strategies(p.spec, p.bytes_per_chip, p.n_msgs)
 
 
 def tpu_best_strategy(p: TpuCollectiveProblem) -> str:
@@ -166,7 +138,8 @@ def ring_allreduce_time(topo: TpuPodTopology, bytes_per_chip: float, axis_size: 
 def hierarchical_allreduce_time(topo: TpuPodTopology, bytes_per_chip: float) -> float:
     """Pod-aware: reduce-scatter in pod, cross-pod all-reduce of 1/chips
     shards over DCN (all hosts inject), all-gather in pod."""
-    sys = topo.system
+    from repro.core.paths import TpuPathModels
+
     in_pod = ring_allreduce_time(topo, bytes_per_chip, topo.torus_x) + ring_allreduce_time(
         topo, bytes_per_chip / topo.torus_x, topo.torus_y
     )

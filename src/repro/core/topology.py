@@ -47,6 +47,12 @@ class GpuNodeTopology:
             return Locality.ON_SOCKET
         return Locality.ON_NODE
 
+    def machine_spec(self):
+        """This machine's cost spec, resolved through the registry."""
+        from repro.core.machine import machine_for
+
+        return machine_for(self)
+
 
 SUMMIT = GpuNodeTopology("summit")
 LASSEN = GpuNodeTopology("lassen")
@@ -54,12 +60,17 @@ LASSEN = GpuNodeTopology("lassen")
 
 @dataclasses.dataclass(frozen=True)
 class TpuPodTopology:
-    """A (pods, x, y) arrangement of TPU chips; per-pod 2D torus of x*y chips."""
+    """A (pods, x, y) arrangement of TPU chips; per-pod 2D torus of x*y chips.
+
+    ``machine`` names the registry entry (:mod:`repro.core.machine`) whose
+    factory builds the cost spec for this topology.
+    """
 
     system: TpuSystem = TPU_V5E
     pods: int = 1
     torus_x: int = 16
     torus_y: int = 16
+    machine: str = "tpu_v5e"
 
     @property
     def chips_per_pod(self) -> int:
@@ -111,6 +122,12 @@ class TpuPodTopology:
 
     def iter_chips(self) -> Iterator[int]:
         return iter(range(self.total_chips))
+
+    def machine_spec(self):
+        """This machine's cost spec, resolved through the registry."""
+        from repro.core.machine import machine_for
+
+        return machine_for(self)
 
 
 SINGLE_POD_V5E = TpuPodTopology(pods=1)

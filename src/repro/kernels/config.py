@@ -21,3 +21,12 @@ def pallas_enabled() -> bool:
 
 def interpret_mode() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable pltpu compiler params (renamed across jax releases:
+    ``TPUCompilerParams`` on jax<=0.4.x, ``CompilerParams`` afterwards)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

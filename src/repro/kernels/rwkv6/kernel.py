@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.config import tpu_compiler_params
+
 
 def _kernel(
     r_ref, k_ref, v_ref, lw_ref, u_ref,  # (1, L, K) x4, (1, K)
@@ -117,7 +119,7 @@ def wkv6(
         ],
         scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
     )(rs, ks, vs, ws, u)

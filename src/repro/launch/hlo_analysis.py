@@ -242,15 +242,21 @@ def _op_operand_bytes(
         for cn in _called_comps(op):
             if cn in comps:
                 sliced.update(_sliced_params(comps[cn]))
+    prev_end = 0
     for i, m in enumerate(re.finditer(r"%([\w.\-]+)", args)):
+        # inline type annotation (f32[8,16]{1,0} %p.1) sits between the
+        # previous operand and this name; use it only when the producer is
+        # unknown, else producers + inline types double-count.
+        chunk = args[prev_end:m.start()]
+        prev_end = m.end()
         if i in sliced:
             total += sliced[i]
             continue
         prod = by_name.get(m.group(1))
         if prod is not None:
             total += _shape_bytes(prod.out_txt)
-    # inline-shaped operands (param refs like f32[8,16]{1,0} %p.1)
-    total += _shape_bytes(args) if "[" in args else 0
+        elif "[" in chunk:
+            total += _shape_bytes(chunk)
     return total
 
 

@@ -18,6 +18,8 @@ import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -199,7 +201,7 @@ def _moe_call(cfg: ModelConfig, p: dict, x: jax.Array, dist: Optional[DistContex
         # remaining data-parallel axes so it is globally replicated.
         return y, jax.lax.pmean(aux, dist.dp_axes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=dist.mesh,
         in_specs=(

@@ -16,6 +16,8 @@ from __future__ import annotations
 from typing import Any, Sequence, Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 
 BLOCK = 1024  # per-block scales bound quantization error by max|g|_block/127
@@ -116,7 +118,7 @@ def compressed_allreduce(
             v[0], slow_axis, fast_axes, fast_size, block
         )[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False
     )
     return fn(x)

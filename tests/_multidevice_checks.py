@@ -15,7 +15,11 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly "auto"
+    AxisType = None
 
 from repro.comms import (
     all_gather_axis,
@@ -35,6 +39,8 @@ ok = lambda name: print(f"OK {name}", flush=True)
 
 
 def mesh2(a, b, names=("pod", "data")):
+    if AxisType is None:
+        return jax.make_mesh((a, b), names)
     return jax.make_mesh((a, b), names, axis_types=(AxisType.Auto,) * 2)
 
 

@@ -2,7 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.fitting import fit_postal
 from repro.core.maxrate import MaxRateParams, maxrate_time, multi_message_time
