@@ -1,11 +1,15 @@
 """Benchmark harness: one section per paper table/figure + TPU adaptation +
-roofline summary.  Exits non-zero if a reproduced claim fails.
+schedule engine + roofline summary.  Exits non-zero if a reproduced claim
+fails.
 
 Writes ``BENCH_paper_models.json`` (per-section pass/fail + the key
-crossover numbers) next to the repo root so the perf trajectory is
-machine-trackable across PRs.
+crossover numbers + schedule-search attribution) next to the repo root so
+the perf trajectory is machine-trackable across PRs, and ``--compare``
+turns that trajectory into a CI gate: the fresh report is diffed against a
+reference (by default the committed JSON) and the run fails on crossover
+drift, section pass->fail regressions, or bottleneck-attribution changes.
 
-    PYTHONPATH=src python -m benchmarks.run [--json PATH]
+    PYTHONPATH=src python -m benchmarks.run [--json PATH] [--compare [REF]]
 """
 from __future__ import annotations
 
@@ -20,17 +24,70 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_paper_models.json")
 
 
+def compare_reports(new: dict, ref: dict) -> list:
+    """Trajectory diff: list of human-readable drift findings (empty = ok).
+
+    Gated quantities are the ones that encode *model decisions*: the Fig-5
+    crossover message counts, section pass/fail, and the schedule-search
+    winner + bottleneck attribution.  Raw times may shift as constants are
+    refit; decisions crossing over is what a PR must own explicitly (by
+    committing the regenerated JSON).
+    """
+    drift = []
+    ref_x = ref.get("crossovers_1KiB", {})
+    new_x = new.get("crossovers_1KiB", {})
+    for name, val in ref_x.items():
+        if name not in new_x:
+            drift.append(f"crossover {name!r} disappeared (was {val})")
+        elif new_x[name] != val:
+            drift.append(f"crossover {name!r} drifted: {val} -> {new_x[name]}")
+    for name, ok in ref.get("sections", {}).items():
+        now = new.get("sections", {}).get(name)
+        if ok and now is False:
+            drift.append(f"section {name!r} regressed: PASS -> FAIL")
+        elif now is None:
+            drift.append(f"section {name!r} disappeared")
+    for regime, rec in ref.get("schedules", {}).items():
+        now = new.get("schedules", {}).get(regime)
+        if now is None:
+            drift.append(f"schedule regime {regime!r} disappeared")
+            continue
+        for key in ("best", "bottleneck", "binding"):
+            if key in rec and now.get(key) != rec[key]:
+                drift.append(
+                    f"schedule {regime!r} {key} drifted: "
+                    f"{rec[key]!r} -> {now.get(key)!r}"
+                )
+    return drift
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=DEFAULT_JSON,
                     help="where to write the machine-readable report")
+    ap.add_argument("--compare", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="REF",
+                    help="diff the fresh report against REF (default: the "
+                         "committed BENCH_paper_models.json) and fail on "
+                         "crossover drift / section regression / "
+                         "bottleneck-attribution change")
     args = ap.parse_args(argv)
 
-    from benchmarks import paper_models, tpu_planner
+    # load the reference BEFORE running: --json may overwrite the same file
+    ref = None
+    if args.compare is not None:
+        try:
+            with open(args.compare) as f:
+                ref = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"# cannot load compare reference {args.compare}: {e}")
+            raise SystemExit(2)
+
+    from benchmarks import paper_models, schedules, tpu_planner
 
     results = {}
     t0 = time.time()
-    for fn in paper_models.ALL + tpu_planner.ALL:
+    for fn in paper_models.ALL + tpu_planner.ALL + schedules.ALL:
         name = fn.__name__
         try:
             results[name] = bool(fn())
@@ -64,6 +121,8 @@ def main(argv=None) -> None:
         "elapsed_seconds": round(elapsed, 2),
         "sections": results,
         "crossovers_1KiB": crossovers,
+        "schedules": getattr(schedules.schedule_search, "last_values", {}),
+        "schedule_parity": getattr(schedules.schedule_parity, "last_values", {}),
         "ok": all(results.values()),
     }
     try:
@@ -77,6 +136,16 @@ def main(argv=None) -> None:
     print(f"\n== benchmark summary ({elapsed:.1f}s) ==")
     for name, ok in results.items():
         print(f"  {'PASS' if ok else 'FAIL'}  {name}")
+
+    if ref is not None:
+        drift = compare_reports(report, ref)
+        print(f"\n== trajectory diff vs {os.path.relpath(args.compare)} ==")
+        if drift:
+            for d in drift:
+                print(f"  DRIFT  {d}")
+            raise SystemExit(2)
+        print("  no drift (crossovers, sections, schedule attribution stable)")
+
     if not all(results.values()):
         raise SystemExit(1)
 

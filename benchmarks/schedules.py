@@ -1,0 +1,106 @@
+"""Schedule-engine benchmarks: parity, search, and bottleneck attribution.
+
+Sections (benchmarks/run.py aggregates and exports the structured results
+into ``BENCH_paper_models.json`` so future PRs can track schedule-search
+wins and attribution drift with ``run.py --compare``):
+
+* ``schedule_parity``     — every registered machine x declared strategy:
+                            engine makespan vs closed-form strategy_time.
+* ``schedule_search``     — ranked simulated schedules (declared strategies
+                            + Bruck + node-aware) per regime, with the
+                            winner's critical-path bottleneck attribution.
+* ``schedule_contention`` — restricted-capacity runs must dominate the
+                            optimistic closed forms.
+"""
+from __future__ import annotations
+
+from repro.core.events import bottleneck_report, run_schedule
+from repro.core.machine import get_machine, registered_machines, strategy_time
+from repro.core.planner import schedule_search_report
+from repro.core.schedule import lower_strategy, simulate_schedule
+
+PARITY_RTOL = 1e-9
+
+# (machine, msg bytes, n msgs, split) regimes the paper's figures cover:
+# eager/latency-bound small messages and rendezvous/bandwidth-bound bulk.
+REGIMES = (
+    ("summit", 8.0, 191, True, "eager_tiny"),
+    ("summit", 1024.0, 191, True, "eager_many"),
+    ("summit", float(2**22), 191, True, "rendezvous_bulk"),
+    ("lassen", 1024.0, 127, True, "eager_many"),
+    ("tpu_v5e", 262144.0, 16, False, "crosspod_mid"),
+)
+
+
+def schedule_parity() -> bool:
+    print("# schedule: engine vs closed-form parity, every machine x strategy")
+    worst = 0.0
+    worst_at = ""
+    for name in registered_machines():
+        spec = get_machine(name)
+        for strat in spec.strategies:
+            for s in (8.0, 1024.0, 65536.0, float(2**22)):
+                for n in (1, 10, 191):
+                    ana = float(strategy_time(spec, strat, s, n))
+                    sim = simulate_schedule(spec, strat, s, n).makespan
+                    rel = abs(sim - ana) / max(abs(ana), 1e-300)
+                    if rel > worst:
+                        worst, worst_at = rel, f"{name}:{strat},s={int(s)},n={n}"
+    print(f"schedule_parity,worst_rel={worst:.3e},at={worst_at}")
+    schedule_parity.last_values = {"worst_rel": worst, "at": worst_at}
+    return worst < PARITY_RTOL
+
+
+def schedule_search() -> bool:
+    print("# schedule: event-engine search — ranked schedules + attribution")
+    results = {}
+    ok = True
+    for machine, s, n, split, label in REGIMES:
+        plan, reports = schedule_search_report(
+            machine, s, n, split_messages=split
+        )
+        best = plan.strategy
+        rep = reports[best]
+        row = ",".join(f"{k}={v*1e3:.4f}ms" for k, v in plan.alternatives)
+        print(f"schedule_search,{machine},{label},best={best},"
+              f"bottleneck={rep.bottleneck},binding={rep.binding},{row}")
+        results[f"{machine}:{label}"] = {
+            "best": best,
+            "times_ms": {k: v * 1e3 for k, v in plan.alternatives},
+            "bottleneck": rep.bottleneck,
+            "binding": rep.binding,
+            "critical_steps": len(rep.critical_steps),
+        }
+        ok &= rep.makespan > 0 and len(plan.alternatives) >= 3
+    # the search must beat the best *declared* strategy somewhere (the whole
+    # point of the mode): Bruck's log2(P) rounds win the tiny/latency-bound
+    # regimes where every declared lowering still pays per-peer messages
+    for regime in ("summit:eager_tiny", "lassen:eager_many"):
+        ok &= not results[regime]["best"].startswith("strategy:")
+    schedule_search.last_values = results
+    return ok
+
+
+def schedule_contention() -> bool:
+    print("# schedule: contended capacities dominate the closed forms")
+    spec = get_machine("summit")
+    ok = True
+    for strat, overrides in (
+        ("extra_msg", {"cpu_net:off-node": 1}),
+        ("dup_devptr", {"cpu_net:off-node": 2}),
+    ):
+        ana = float(strategy_time(spec, strat, 1024.0, 100))
+        sched = lower_strategy(
+            spec, strat, 1024.0, 100, capacity_overrides=overrides
+        )
+        res = run_schedule(sched)
+        rep = bottleneck_report(res)
+        slowdown = res.makespan / ana
+        print(f"schedule_contention,summit,{strat},analytic={ana*1e3:.4f}ms,"
+              f"contended={res.makespan*1e3:.4f}ms,slowdown={slowdown:.2f}x,"
+              f"bottleneck={rep.bottleneck}")
+        ok &= res.makespan > ana * (1 + 1e-9)
+    return ok
+
+
+ALL = [schedule_parity, schedule_search, schedule_contention]

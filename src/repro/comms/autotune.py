@@ -26,7 +26,13 @@ from repro.core.machine import (
     simulate_strategies,
 )
 from repro.core.params import Locality
-from repro.core.planner import plan_ep_dispatch, plan_tpu_allreduce, plan_tpu_crosspod, Plan
+from repro.core.planner import (
+    Plan,
+    plan_ep_dispatch,
+    plan_schedule_search,
+    plan_tpu_allreduce,
+    plan_tpu_crosspod,
+)
 from repro.core.topology import TpuPodTopology
 
 # Registry name of the machine this deployment runs on; selectors use it
@@ -78,6 +84,67 @@ def select_collective_strategy(
         _resolve(machine), nbytes_per_msg, n_msgs, split_messages=split_messages
     )
     return min(costs, key=costs.get)
+
+
+def select_schedule(
+    machine: Union[str, MachineSpec, None],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    split_messages: bool = False,
+    peers: Optional[int] = None,
+) -> str:
+    """Best *simulated* schedule — the event-engine search mode.
+
+    Ranks every declared strategy plus the schedule-library algorithms
+    (Bruck, node-aware two-level, ...) by simulated makespan, so multi-step
+    schedules the closed forms cannot express compete on equal footing.
+    Names are ``strategy:<declared>`` or a library schedule name."""
+    plan = plan_schedule_search(
+        _resolve(machine), nbytes_per_msg, n_msgs,
+        peers=peers, split_messages=split_messages,
+    )
+    return plan.strategy
+
+
+def explain_bottleneck(
+    machine: Union[str, MachineSpec, None],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    strategy: Optional[str] = None,
+    split_messages: bool = False,
+):
+    """Bottleneck attribution for one schedule (default: the declared best).
+
+    ``strategy`` accepts anything :func:`select_schedule` returns — a
+    declared strategy (bare or ``strategy:``-prefixed) or a schedule-library
+    name like ``bruck_alltoall``.  Returns a
+    :class:`repro.core.events.BottleneckReport` naming the saturated
+    resource (link / copy engine / core pool) and the binding term
+    (latency / bandwidth / injection) — the paper's "pinpoint the
+    communication bottleneck" promise, made executable."""
+    from repro.core.events import bottleneck_report, run_schedule
+    from repro.core.schedule import candidate_schedules, simulate_schedule
+
+    spec = _resolve(machine)
+    if strategy is None:
+        strategy = select_collective_strategy(
+            spec, nbytes_per_msg, n_msgs, split_messages=split_messages
+        )
+    bare = strategy.split(":", 1)[1] if strategy.startswith("strategy:") else strategy
+    if bare in spec.strategies:
+        result = simulate_schedule(
+            spec, bare, nbytes_per_msg, n_msgs, split_messages=split_messages
+        )
+        return bottleneck_report(result)
+    cands = candidate_schedules(
+        spec, nbytes_per_msg, n_msgs, split_messages=split_messages
+    )
+    if strategy not in cands:
+        raise KeyError(
+            f"unknown schedule {strategy!r} for machine {spec.name!r}; "
+            f"candidates: {sorted(cands)}"
+        )
+    return bottleneck_report(run_schedule(cands[strategy]))
 
 
 def _topo_from_mesh_shape(

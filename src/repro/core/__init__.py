@@ -11,6 +11,10 @@ Layers:
   paths     — path costs (GPUDirect vs 3-step; TPU direct/staged/multirail)
   fitting   — least-squares (re)fitting of all model parameters
   simulate  — collective strategy cost simulation (paper §VI)
+  events    — discrete-event engine: finite resources, queueing, critical
+              path, bottleneck_report (DESIGN.md §4)
+  schedule  — declarative collective schedules: strategy lowering, the
+              ring/Bruck/recursive/node-aware library, schedule search
   planner   — strategy selection consumed by repro.comms
   benchmark — live measurement harness feeding `fitting`; fitted machines
               register via `spec_from_measurements` and plan like built-ins
@@ -69,6 +73,23 @@ from repro.core.paths import (
     memcpy_time,
     three_step_time,
 )
+from repro.core.events import (
+    BottleneckReport,
+    Resource,
+    Schedule,
+    SimResult,
+    Step,
+    bottleneck_report,
+    run_schedule,
+)
+from repro.core.schedule import (
+    best_schedule,
+    candidate_schedules,
+    lower_path,
+    lower_strategy,
+    search_schedules,
+    simulate_schedule,
+)
 from repro.core.planner import (
     CollectiveKind,
     Plan,
@@ -77,9 +98,11 @@ from repro.core.planner import (
     plan_gpu_messages,
     plan_messages,
     plan_moe_alltoall,
+    plan_schedule_search,
     plan_tpu_allreduce,
     plan_tpu_crosspod,
+    schedule_search_report,
 )
-from repro.core import fitting, simulate, benchmark
+from repro.core import events, fitting, schedule, simulate, benchmark
 
 __all__ = [k for k in dir() if not k.startswith("_")]

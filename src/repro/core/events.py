@@ -1,0 +1,359 @@
+"""Discrete-event execution of collective schedules over shared resources.
+
+The closed-form evaluators (:mod:`repro.core.machine`) price a strategy as a
+sum of tier traversals — optimistic by construction, because every lane is
+assumed to have its own copy of every resource.  This module executes a
+:class:`~repro.core.schedule.Schedule` (a DAG of steps) against *finite*
+resources — links with a lane count, per-GPU copy/DMA engines, per-node CPU
+core pools — so that concurrent steps queue when they outnumber the slots.
+That queueing is exactly what the paper's measured-vs-modeled gaps show
+(Fig 6's Dup-Devptr launch serialization, the §IV injection saturation), and
+it is what lets :func:`bottleneck_report` *pinpoint* the saturated resource
+instead of merely ranking whole strategies.
+
+The engine is a deterministic greedy list scheduler:
+
+* a step becomes *ready* when all its dependencies have finished;
+* among ready steps, the one that can start earliest runs next (ties broken
+  by declaration order), occupying one slot of each of its resources for its
+  whole duration;
+* a resource with ``capacity`` slots serializes any excess — the engine
+  records which step's completion unblocked each start, giving an exact
+  blocking chain for critical-path extraction.
+
+Durations are *inputs* (the schedule builder prices steps with the machine's
+``TransportTier`` postal models), so a schedule whose steps never contend
+reproduces the analytic cost to float round-off; a schedule whose steps do
+contend can only be slower.  ``tests/test_schedule.py`` pins both directions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Mapping, Optional, Tuple
+
+
+# --------------------------------------------------------------------------
+# Schedule vocabulary: resources and steps.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Resource:
+    """One contended thing: ``capacity`` concurrent slots.
+
+    Examples: a NIC with ``width`` injection lanes, a copy/DMA engine
+    (capacity 1 — the §2.2 serialization mechanism), a node's CPU core pool.
+    """
+
+    name: str
+    capacity: int = 1
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"resource {self.name!r}: capacity must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One unit of work: a priced operation occupying resources for its span.
+
+    ``kind`` is one of ``send`` / ``copy_d2h`` / ``copy_h2d`` / ``reduce`` /
+    ``stage`` (free-form tags are allowed).  ``alpha_time`` / ``beta_time``
+    split the duration into its latency and bandwidth parts, and
+    ``cap_bound`` marks that the bandwidth rate came from the node-aggregate
+    injection cap ``beta_N`` rather than the per-lane transport rate —
+    :func:`bottleneck_report` aggregates these to name the binding term.
+    """
+
+    name: str
+    duration: float
+    resources: Tuple[str, ...] = ()
+    deps: Tuple[str, ...] = ()
+    kind: str = "send"
+    alpha_time: float = 0.0
+    beta_time: float = 0.0
+    cap_bound: bool = False
+    nbytes: float = 0.0
+    n_msgs: float = 0.0
+
+    def __post_init__(self):
+        if self.duration < 0:
+            raise ValueError(f"step {self.name!r}: negative duration")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A named DAG of steps plus the resources they compete for."""
+
+    name: str
+    steps: Tuple[Step, ...]
+    resources: Mapping[str, Resource]
+    description: str = ""
+
+    def __post_init__(self):
+        names = set()
+        for st in self.steps:
+            if st.name in names:
+                raise ValueError(f"duplicate step name {st.name!r}")
+            names.add(st.name)
+        for st in self.steps:
+            for d in st.deps:
+                if d not in names:
+                    raise ValueError(f"step {st.name!r}: unknown dep {d!r}")
+            for r in st.resources:
+                if r not in self.resources:
+                    raise ValueError(f"step {st.name!r}: unknown resource {r!r}")
+
+
+# --------------------------------------------------------------------------
+# Execution traces.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepTrace:
+    """One executed step: when it ran and what its start waited on.
+
+    ``blocker`` names the step whose completion gated this start (the
+    latest-finishing dependency, or the step whose slot release on
+    ``blocked_on`` let this one in); None for steps that start at t=0.
+    ``queue_wait`` is start minus ready time — nonzero only under contention.
+    """
+
+    step: Step
+    start: float
+    end: float
+    ready: float
+    blocker: Optional[str]
+    blocked_on: Optional[str]  # resource name when the wait was a queue
+
+    @property
+    def queue_wait(self) -> float:
+        return self.start - self.ready
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Engine output: makespan plus the full per-step / per-resource record."""
+
+    schedule: Schedule
+    makespan: float
+    traces: Mapping[str, StepTrace]
+
+    def critical_path(self) -> List[StepTrace]:
+        """Blocking chain ending at the step that defines the makespan."""
+        if not self.traces:
+            return []
+        last = max(self.traces.values(), key=lambda t: (t.end, t.step.name))
+        chain = [last]
+        seen = {last.step.name}
+        while chain[-1].blocker is not None:
+            nxt = self.traces[chain[-1].blocker]
+            if nxt.step.name in seen:  # defensive: blocking chains are acyclic
+                break
+            seen.add(nxt.step.name)
+            chain.append(nxt)
+        chain.reverse()
+        return chain
+
+    def busy_time(self, resource: str) -> float:
+        return sum(
+            t.end - t.start
+            for t in self.traces.values()
+            if resource in t.step.resources
+        )
+
+    def utilization(self, resource: str) -> float:
+        if self.makespan <= 0.0:
+            return 0.0
+        cap = self.schedule.resources[resource].capacity
+        return self.busy_time(resource) / (cap * self.makespan)
+
+    def queue_wait(self, resource: str) -> float:
+        """Total time steps sat queued for a slot on this resource."""
+        return sum(
+            t.queue_wait
+            for t in self.traces.values()
+            if t.blocked_on == resource
+        )
+
+
+def run_schedule(schedule: Schedule) -> SimResult:
+    """Execute the DAG with greedy earliest-start list scheduling."""
+    steps = {st.name: st for st in schedule.steps}
+    seq = {st.name: i for i, st in enumerate(schedule.steps)}
+    dependents: Dict[str, List[str]] = {n: [] for n in steps}
+    missing: Dict[str, int] = {}
+    for st in schedule.steps:
+        missing[st.name] = len(st.deps)
+        for d in st.deps:
+            dependents[d].append(st.name)
+
+    # per-resource: heap of (end, step_name) for slots currently held
+    occupied: Dict[str, List[Tuple[float, str]]] = {
+        r: [] for r in schedule.resources
+    }
+    traces: Dict[str, StepTrace] = {}
+    ready_time: Dict[str, float] = {}
+    ready_blocker: Dict[str, Optional[str]] = {}
+    ready: List[str] = []
+    for st in schedule.steps:
+        if missing[st.name] == 0:
+            ready.append(st.name)
+            ready_time[st.name] = 0.0
+            ready_blocker[st.name] = None
+
+    def slot_release(rname: str, at: float) -> Tuple[float, Optional[str]]:
+        """(earliest start on rname for a step ready at `at`, blocking step)."""
+        heap = occupied[rname]
+        cap = schedule.resources[rname].capacity
+        # slots whose holders end at or before `at` are free by then
+        live = [(e, n) for e, n in heap if e > at]
+        if len(live) < cap:
+            return at, None
+        # must wait for the (len(live)-cap+1)-th earliest end among holders
+        live.sort()
+        e, n = live[len(live) - cap]
+        return e, n
+
+    while ready:
+        # pick the ready step that can start earliest (deterministic)
+        best = None
+        for name in ready:
+            st = steps[name]
+            t0 = ready_time[name]
+            start, rblocker, rname = t0, None, None
+            for r in st.resources:
+                avail, blk = slot_release(r, t0)
+                if avail > start:
+                    start, rblocker, rname = avail, blk, r
+            key = (start, seq[name])
+            if best is None or key < best[0]:
+                best = (key, name, start, rblocker, rname)
+        _, name, start, rblocker, rname = best
+        ready.remove(name)
+        st = steps[name]
+        end = start + st.duration
+        blocker = rblocker if rblocker is not None else ready_blocker[name]
+        traces[name] = StepTrace(
+            step=st, start=start, end=end, ready=ready_time[name],
+            blocker=blocker, blocked_on=rname if rblocker is not None else None,
+        )
+        for r in st.resources:
+            heap = occupied[r]
+            while heap and heap[0][0] <= start:
+                heapq.heappop(heap)
+            heapq.heappush(heap, (end, name))
+        for dep_name in dependents[name]:
+            missing[dep_name] -= 1
+            prev = ready_time.get(dep_name, 0.0)
+            if end >= prev:
+                ready_time[dep_name] = end
+                ready_blocker[dep_name] = name
+            if missing[dep_name] == 0:
+                ready.append(dep_name)
+
+    if len(traces) != len(steps):
+        unrun = sorted(set(steps) - set(traces))
+        raise ValueError(
+            f"schedule {schedule.name!r} has a dependency cycle; "
+            f"unrunnable steps: {unrun[:8]}"
+        )
+    makespan = max((t.end for t in traces.values()), default=0.0)
+    return SimResult(schedule=schedule, makespan=makespan, traces=traces)
+
+
+# --------------------------------------------------------------------------
+# Bottleneck attribution.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResourceUsage:
+    """Aggregate view of one resource across a run."""
+
+    name: str
+    capacity: int
+    busy: float          # sum of step durations occupying it
+    utilization: float   # busy / (capacity * makespan)
+    queue_wait: float    # time steps spent queued for a slot
+    critical: float      # occupancy by critical-path steps
+    alpha_time: float    # latency part of critical occupancy
+    beta_time: float     # bandwidth part of critical occupancy
+    cap_beta_time: float  # part of beta_time priced at the beta_N cap
+
+
+@dataclasses.dataclass(frozen=True)
+class BottleneckReport:
+    """Which resource bounds the schedule, and through which term.
+
+    ``binding`` is ``"latency"`` when per-message alpha dominates the
+    bottleneck resource's critical-path occupancy (the paper's eager /
+    message-count regime), ``"injection"`` when the dominating bandwidth
+    time was priced at the node-aggregate cap ``beta_N`` (Table III
+    saturation), and ``"bandwidth"`` for per-lane transport-rate bound.
+    """
+
+    schedule: str
+    makespan: float
+    bottleneck: str
+    binding: str
+    resources: Mapping[str, ResourceUsage]
+    critical_steps: Tuple[str, ...]
+
+    def summary(self) -> str:
+        lines = [
+            f"schedule {self.schedule!r}: makespan {self.makespan:.3e}s — "
+            f"bottleneck {self.bottleneck!r} ({self.binding}-bound)"
+        ]
+        for u in sorted(
+            self.resources.values(), key=lambda u: u.critical, reverse=True
+        ):
+            lines.append(
+                f"  {u.name:<28} busy={u.busy:.3e}s util={u.utilization:5.1%} "
+                f"critical={u.critical:.3e}s queue_wait={u.queue_wait:.3e}s"
+            )
+        lines.append("  critical path: " + " -> ".join(self.critical_steps))
+        return "\n".join(lines)
+
+
+def bottleneck_report(result: SimResult) -> BottleneckReport:
+    """Attribute the makespan: saturated resource + binding cost term."""
+    chain = result.critical_path()
+    critical_names = {t.step.name for t in chain}
+    usages: Dict[str, ResourceUsage] = {}
+    for rname, res in result.schedule.resources.items():
+        busy = crit = alpha_t = beta_t = cap_t = 0.0
+        for t in result.traces.values():
+            if rname not in t.step.resources:
+                continue
+            busy += t.end - t.start
+            if t.step.name in critical_names:
+                crit += t.end - t.start
+                alpha_t += t.step.alpha_time
+                beta_t += t.step.beta_time
+                if t.step.cap_bound:
+                    cap_t += t.step.beta_time
+        usages[rname] = ResourceUsage(
+            name=rname, capacity=res.capacity, busy=busy,
+            utilization=result.utilization(rname),
+            queue_wait=result.queue_wait(rname),
+            critical=crit, alpha_time=alpha_t, beta_time=beta_t,
+            cap_beta_time=cap_t,
+        )
+    if not usages:
+        return BottleneckReport(
+            schedule=result.schedule.name, makespan=result.makespan,
+            bottleneck="(none)", binding="latency", resources={},
+            critical_steps=tuple(t.step.name for t in chain),
+        )
+    top = max(usages.values(), key=lambda u: (u.critical, u.busy))
+    if top.alpha_time >= top.beta_time:
+        binding = "latency"
+    elif top.cap_beta_time > top.beta_time / 2:
+        binding = "injection"
+    else:
+        binding = "bandwidth"
+    return BottleneckReport(
+        schedule=result.schedule.name, makespan=result.makespan,
+        bottleneck=top.name, binding=binding, resources=usages,
+        critical_steps=tuple(t.step.name for t in chain),
+    )

@@ -80,25 +80,84 @@ def fit_transport_model(
     return fit_segmented(sizes, times, short_max, eager_max)
 
 
+def _weighted_linfit_sse(prefix: np.ndarray, i: int, j: int) -> float:
+    """Weighted-LS residual of T = a + b*s over samples [i, j).
+
+    ``prefix`` holds cumulative sums of (w, w*s, w*s^2, w*t, w*s*t, w*t^2)
+    with w = 1/t^2 (relative residuals, matching :func:`fit_postal`'s
+    weighting), so each window's normal equations close in O(1).
+    """
+    Sw, Sws, Swss, Swt, Swst, Swtt = prefix[j] - prefix[i]
+    det = Sw * Swss - Sws * Sws
+    if det <= 0 or not np.isfinite(det):
+        # degenerate window (e.g. all samples at one size): constant fit
+        a = Swt / Sw if Sw > 0 else 0.0
+        return float(Swtt - a * Swt)
+    a = (Swt * Swss - Swst * Sws) / det
+    b = (Sw * Swst - Sws * Swt) / det
+    # SSE identity for the LS solution: sum w*t^2 - a*sum w*t - b*sum w*s*t
+    return float(max(Swtt - a * Swt - b * Swst, 0.0))
+
+
 def detect_breakpoints(
     sizes: Sequence[float], times: Sequence[float], n_break: int = 2
 ) -> Tuple[float, ...]:
-    """Locate protocol switch points as the sizes with the largest jump in
-    local per-byte cost (discrete second difference of T on log-size grid).
+    """Locate protocol switch points by piecewise-postal residual search.
 
-    Used when fitting a machine whose eager/rendezvous thresholds are unknown.
+    Considers every segmentation of the size-sorted samples into
+    ``n_break + 1`` contiguous windows, scores each by the total weighted
+    least-squares residual of one postal fit (T = alpha + beta*s) per
+    window, and returns the breakpoints of the best segmentation — the
+    geometric midpoint between the samples flanking each window edge, so
+    downstream threshold masks (``s <= short_max``) split exactly there.
+
+    This replaces the old largest-log-jump heuristic, which keyed on single
+    noisy samples; the residual search uses every sample in every window and
+    survives multiplicative measurement noise (regression test:
+    ``tests/test_fitting.py::test_detect_breakpoints_noisy_regression``).
     """
     s = np.asarray(sizes, np.float64)
     t = np.asarray(times, np.float64)
     order = np.argsort(s)
     s, t = s[order], t[order]
-    if s.size < 4:
+    n = int(s.size)
+    # at least 3 samples per window so no segment can chase one noisy point
+    min_seg = 3
+    while n_break > 0 and n < (n_break + 1) * min_seg:
+        n_break -= 1
+    if n_break == 0:
         return tuple()
-    # local slope between consecutive samples
-    slope = np.diff(t) / np.maximum(np.diff(s), 1e-30)
-    jump = np.abs(np.diff(np.log(np.maximum(t[1:], 1e-30))))
-    idx = np.argsort(jump)[::-1][:n_break]
-    return tuple(sorted(float(s[i + 1]) for i in idx))
+
+    w = 1.0 / np.maximum(t, 1e-30) ** 2
+    terms = np.stack([w, w * s, w * s * s, w * t, w * s * t, w * t * t], axis=1)
+    prefix = np.zeros((n + 1, 6), np.float64)
+    np.cumsum(terms, axis=0, out=prefix[1:])
+
+    # DP over segment ends: best[k][j] = min residual covering [0, j) with k
+    # windows; O(n_break * n^2) with O(1) window scoring.
+    INF = float("inf")
+    best = np.full((n_break + 1, n + 1), INF)
+    back = np.zeros((n_break + 1, n + 1), np.int64)
+    for j in range(min_seg, n + 1):
+        best[0, j] = _weighted_linfit_sse(prefix, 0, j)
+    for k in range(1, n_break + 1):
+        for j in range((k + 1) * min_seg, n + 1):
+            lo, hi = k * min_seg, j - min_seg + 1
+            for i in range(lo, hi):
+                cand = best[k - 1, i] + _weighted_linfit_sse(prefix, i, j)
+                if cand < best[k, j]:
+                    best[k, j] = cand
+                    back[k, j] = i
+    if not np.isfinite(best[n_break, n]):
+        return tuple()
+    cuts = []
+    j = n
+    for k in range(n_break, 0, -1):
+        i = int(back[k, j])
+        cuts.append(i)
+        j = i
+    cuts.reverse()
+    return tuple(float(np.sqrt(s[i - 1] * s[i])) for i in cuts)
 
 
 def fit_maxrate_beta_N(

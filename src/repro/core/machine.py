@@ -79,6 +79,21 @@ class TransportTier:
         p = self.params_for(nbytes)
         return MaxRateParams(p.alpha, p.beta, self.beta_N)
 
+    def postal_terms(self, nbytes: float, ppn: float = 1.0) -> Tuple[float, float, bool]:
+        """(alpha, effective beta, cap_bound) at one size with ppn injectors.
+
+        The scalar form of :func:`_capped_beta` — the schedule compiler
+        (:mod:`repro.core.schedule`) prices steps with it so the event engine
+        and the closed-form evaluators agree bit-for-bit on uncontended runs.
+        """
+        p = self.params_for(float(nbytes))
+        if self.beta_N is None:
+            return p.alpha, p.beta, False
+        capped = float(ppn) * self.beta_N
+        if capped > p.beta:
+            return p.alpha, capped, True
+        return p.alpha, p.beta, False
+
     def time(self, nbytes) -> np.ndarray:
         return self.model.time(nbytes)
 

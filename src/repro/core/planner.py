@@ -137,6 +137,53 @@ def plan_gpu_collective(
 
 
 # --------------------------------------------------------------------------
+# Schedule search: rank event-engine-simulated schedules — every declared
+# strategy plus the library algorithms (Bruck, node-aware two-level, ...)
+# the closed forms cannot express (DESIGN.md §4).
+# --------------------------------------------------------------------------
+
+def plan_schedule_search(
+    machine: Union[str, MachineSpec],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    *,
+    peers: Optional[int] = None,
+    split_messages: bool = False,
+    include_library: bool = True,
+    capacity_overrides=None,
+) -> Plan:
+    """Rank every applicable schedule by simulated makespan.
+
+    Unlike :func:`plan_gpu_collective` (closed forms over the fixed declared
+    strategies), this lowers each candidate to a Schedule and executes it on
+    the event engine, so queueing on shared resources is priced in and the
+    candidate set includes the multi-step library algorithms."""
+    from repro.core import schedule as _sched
+
+    results = _sched.search_schedules(
+        _spec(machine), nbytes_per_msg, n_msgs,
+        peers=peers, split_messages=split_messages,
+        include_library=include_library, capacity_overrides=capacity_overrides,
+    )
+    return _mk_plan({name: r.makespan for name, r in results.items()})
+
+
+def schedule_search_report(
+    machine: Union[str, MachineSpec],
+    nbytes_per_msg: float,
+    n_msgs: int = 1,
+    **kwargs,
+) -> Tuple[Plan, Dict[str, "object"]]:
+    """(ranked Plan, per-candidate BottleneckReport) for a schedule search."""
+    from repro.core import schedule as _sched
+    from repro.core.events import bottleneck_report
+
+    results = _sched.search_schedules(_spec(machine), nbytes_per_msg, n_msgs, **kwargs)
+    plan = _mk_plan({name: r.makespan for name, r in results.items()})
+    return plan, {name: bottleneck_report(r) for name, r in results.items()}
+
+
+# --------------------------------------------------------------------------
 # TPU: cross-pod strategy for mesh collectives (same generic machinery).
 # --------------------------------------------------------------------------
 
@@ -169,17 +216,15 @@ def plan_ep_dispatch(
     group_sizes: Tuple[int, int],
 ) -> Plan:
     """Direct vs two-hop hierarchical all-to-all over a 2-axis EP group
-    (serving layout).  Postal terms on ICI: direct sends P-1 messages per
-    rank; two-hop sends (inner-1) + (outer-1) messages, each hop moving the
-    full payload once — the paper's message-count-vs-volume trade (§V/§VI)
-    at decode payload sizes."""
-    sys = topo.system
-    outer, inner = group_sizes
-    P_total = outer * inner
-    s_total = bytes_per_bucket * P_total
-    direct = (P_total - 1) * sys.ici_alpha + s_total * sys.ici_beta / sys.ici_links_per_chip
-    hier = (inner - 1 + outer - 1) * sys.ici_alpha + 2 * s_total * sys.ici_beta / sys.ici_links_per_chip
-    return _mk_plan({"direct": direct, "hierarchical": hier})
+    (serving layout): direct sends P-1 messages per rank; two-hop sends
+    (inner-1) + (outer-1) messages, each hop moving the full payload once —
+    the paper's message-count-vs-volume trade (§V/§VI) at decode payload
+    sizes, expressed as ICI-tier schedules run on the event engine."""
+    from repro.core.events import run_schedule
+    from repro.core.schedule import ep_dispatch_schedules
+
+    scheds = ep_dispatch_schedules(machine_for(topo), bytes_per_bucket, group_sizes)
+    return _mk_plan({k: run_schedule(s).makespan for k, s in scheds.items()})
 
 
 def plan_moe_alltoall(

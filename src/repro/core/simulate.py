@@ -123,16 +123,22 @@ def tpu_best_strategy(p: TpuCollectiveProblem) -> str:
 
 
 # --------------------------------------------------------------------------
-# Mesh-collective analytic costs (used for roofline napkin math): ring and
-# hierarchical algorithms on the TPU torus.
+# Mesh-collective costs (used for roofline napkin math): ring and
+# hierarchical algorithms on the TPU torus, expressed as declared schedules
+# executed by the event engine (repro.core.schedule / repro.core.events).
 # --------------------------------------------------------------------------
 
 def ring_allreduce_time(topo: TpuPodTopology, bytes_per_chip: float, axis_size: int) -> float:
-    """Bidirectional-ring all-reduce over an ICI axis: 2(k-1)/k * S per link."""
-    sys = topo.system
-    steps = 2 * (axis_size - 1)
-    per_step = bytes_per_chip / axis_size
-    return steps * (sys.ici_alpha + per_step * sys.ici_beta / 2)  # 2 directions
+    """Bidirectional-ring all-reduce over an ICI axis: 2(k-1) rounds moving
+    S/k per link split over both directions (2(k-1)/k · S total), as a ring
+    Schedule on the ICI tier run by the event engine."""
+    from repro.core.events import run_schedule
+    from repro.core.schedule import ring_allreduce_schedule
+
+    sched = ring_allreduce_schedule(
+        machine_for(topo), "ici", axis_size, bytes_per_chip
+    )
+    return run_schedule(sched).makespan
 
 
 def hierarchical_allreduce_time(topo: TpuPodTopology, bytes_per_chip: float) -> float:

@@ -1,0 +1,89 @@
+"""Breakpoint-detection tests: the piecewise-fit residual search.
+
+The old ``detect_breakpoints`` keyed on the single largest log-jump between
+adjacent samples, so one noisy measurement (or a cache hiccup spike) moved a
+protocol threshold anywhere.  The residual search scores whole segmentations
+with per-window postal fits; these tests pin exact recovery on clean data,
+recovery under multiplicative noise, and immunity to a single outlier that
+provably broke the old heuristic.
+"""
+import numpy as np
+import pytest
+
+from repro.core.fitting import detect_breakpoints, fit_transport_model
+from repro.core.params import Locality
+from repro.core.postal import SegmentedPostalModel, paper_model
+
+# summit cpu off-node: true protocol thresholds (4096, 65536)
+MODEL = paper_model("summit", "cpu", Locality.OFF_NODE)
+TRUE = (4096.0, 65536.0)
+SIZES = np.unique(np.logspace(0, 8, 96).astype(np.int64)).astype(np.float64)
+
+
+def _within_factor(got: float, true: float, factor: float) -> bool:
+    return true / factor <= got <= true * factor
+
+
+def test_detect_breakpoints_clean_exact():
+    bps = detect_breakpoints(SIZES, np.asarray(MODEL.time(SIZES)))
+    assert len(bps) == 2
+    # breakpoints are geometric midpoints between flanking samples, so the
+    # recovered thresholds sit within one log-grid cell of the truth
+    assert _within_factor(bps[0], TRUE[0], 1.25)
+    assert _within_factor(bps[1], TRUE[1], 1.25)
+
+
+def test_detect_breakpoints_noisy_regression():
+    """5% multiplicative noise: both thresholds survive (the old heuristic
+    lost them to whichever adjacent pair the noise made jumpiest)."""
+    rng = np.random.default_rng(0)
+    times = np.asarray(MODEL.time(SIZES))
+    noisy = times * (1.0 + 0.05 * rng.standard_normal(times.shape))
+    bps = detect_breakpoints(SIZES, noisy)
+    assert len(bps) == 2
+    assert _within_factor(bps[0], TRUE[0], 2.0)
+    assert _within_factor(bps[1], TRUE[1], 2.0)
+
+
+def test_detect_breakpoints_rendezvous_robust_across_seeds():
+    """The eager->rendezvous switch (the planner-relevant one: it gates the
+    Fig-5 staging decision) survives 10% noise on every seed."""
+    times = np.asarray(MODEL.time(SIZES))
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        noisy = times * (1.0 + 0.10 * rng.standard_normal(times.shape))
+        bps = detect_breakpoints(SIZES, noisy)
+        assert len(bps) == 2
+        assert _within_factor(bps[1], TRUE[1], 2.0), f"seed {seed}: {bps}"
+
+
+def test_detect_breakpoints_ignores_single_outlier():
+    """One 3x spike mid-rendezvous — exactly what the old largest-jump
+    heuristic locked onto — must not move either threshold."""
+    times = np.asarray(MODEL.time(SIZES)).copy()
+    times[int(np.argmin(np.abs(SIZES - 1e6)))] *= 3.0
+    bps = detect_breakpoints(SIZES, times)
+    assert _within_factor(bps[0], TRUE[0], 1.25)
+    assert _within_factor(bps[1], TRUE[1], 1.25)
+
+
+def test_detect_breakpoints_small_samples_degrade_gracefully():
+    assert detect_breakpoints([1.0, 2.0], [1e-6, 1e-6]) == ()
+    # 6 samples: room for one split at most
+    s = np.array([1.0, 4.0, 16.0, 64.0, 256.0, 1024.0])
+    t = 1e-6 + s * 1e-9
+    bps = detect_breakpoints(s, t, n_break=2)
+    assert len(bps) <= 1
+
+
+def test_fit_transport_model_detect_roundtrip():
+    """thresholds="detect" recovers a segmented model whose predictions
+    track the generator within the noise floor."""
+    rng = np.random.default_rng(3)
+    times = np.asarray(MODEL.time(SIZES))
+    noisy = times * (1.0 + 0.05 * rng.standard_normal(times.shape))
+    fitted = fit_transport_model(SIZES, noisy, thresholds="detect")
+    assert isinstance(fitted, SegmentedPostalModel)
+    pred = np.asarray(fitted.time(SIZES))
+    rel = np.abs(pred - times) / times
+    assert float(np.median(rel)) < 0.10
