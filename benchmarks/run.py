@@ -9,7 +9,13 @@ turns that trajectory into a CI gate: the fresh report is diffed against a
 reference (by default the committed JSON) and the run fails on crossover
 drift, section pass->fail regressions, or bottleneck-attribution changes.
 
+Per-PR reports are archived by CI under ``benchmarks/history/<short-sha>.json``
+(see ci.yml); ``--history`` prints the crossover / schedule-winner / overlap
+trajectory across the archived reports (needs >= 2) and exits without
+running the benchmarks.
+
     PYTHONPATH=src python -m benchmarks.run [--json PATH] [--compare [REF]]
+    PYTHONPATH=src python -m benchmarks.run --history [DIR]
 """
 from __future__ import annotations
 
@@ -22,6 +28,70 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_paper_models.json")
+HISTORY_DIR = os.path.join(os.path.dirname(__file__), "history")
+
+
+def print_history(history_dir: str) -> int:
+    """Trajectory across archived per-PR reports: one line per gated
+    quantity showing its value in each report (oldest first).  Returns an
+    exit code: 0 once >= 2 reports exist, 3 otherwise (nothing to plot)."""
+    try:
+        names = [f for f in os.listdir(history_dir) if f.endswith(".json")]
+    except OSError:
+        names = []
+    reports = []
+    for fname in sorted(names):
+        path = os.path.join(history_dir, fname)
+        try:
+            with open(path) as f:
+                reports.append((os.path.splitext(fname)[0], json.load(f)))
+        except (OSError, ValueError) as e:
+            print(f"# skipping unreadable report {fname}: {e}")
+    # order by the generation timestamp stored IN the report — file mtimes
+    # are useless in CI, where a fresh checkout stamps every committed
+    # report identically and the short-sha filenames sort randomly
+    reports.sort(key=lambda kv: kv[1].get("generated_at", 0.0))
+    print(f"== benchmark trajectory ({len(reports)} archived reports in "
+          f"{os.path.relpath(history_dir)}) ==")
+    if len(reports) < 2:
+        print("  need >= 2 archived reports to plot a trajectory "
+              "(CI archives one per PR)")
+        return 3
+    print("  reports: " + " -> ".join(sha for sha, _ in reports))
+
+    def series(getter):
+        vals = []
+        for _, rep in reports:
+            try:
+                vals.append(getter(rep))
+            except (KeyError, TypeError):
+                vals.append(None)
+        return vals
+
+    def fmt(vals):
+        return " -> ".join("?" if v is None else str(v) for v in vals)
+
+    keys = sorted({k for _, r in reports for k in r.get("crossovers_1KiB", {})})
+    for name in keys:
+        print(f"  crossover {name:<12} " +
+              fmt(series(lambda r, n=name: r["crossovers_1KiB"][n])))
+    regimes = sorted({k for _, r in reports for k in r.get("schedules", {})})
+    for regime in regimes:
+        print(f"  schedule  {regime:<24} best: " +
+              fmt(series(lambda r, k=regime: r["schedules"][k]["best"])) +
+              " | bottleneck: " +
+              fmt(series(lambda r, k=regime: r["schedules"][k]["bottleneck"])))
+    pairs = sorted({k for _, r in reports for k in r.get("overlap", {})})
+    for pair in pairs:
+        print(f"  overlap   {pair:<28} speedup_vs_serial: " + fmt(series(
+            lambda r, k=pair: round(r["overlap"][k]["speedup_vs_serial"], 3))))
+    fails = series(
+        lambda r: sorted(k for k, v in r.get("sections", {}).items() if not v)
+    )
+    print("  failing sections: " +
+          " -> ".join("?" if v is None else (",".join(v) or "none")
+                      for v in fails))
+    return 0
 
 
 def compare_reports(new: dict, ref: dict) -> list:
@@ -58,6 +128,17 @@ def compare_reports(new: dict, ref: dict) -> list:
                     f"schedule {regime!r} {key} drifted: "
                     f"{rec[key]!r} -> {now.get(key)!r}"
                 )
+    for pair, rec in ref.get("overlap", {}).items():
+        now = new.get("overlap", {}).get(pair)
+        if now is None:
+            drift.append(f"overlap pair {pair!r} disappeared")
+            continue
+        for key in ("bottleneck", "binding"):
+            if key in rec and now.get(key) != rec[key]:
+                drift.append(
+                    f"overlap {pair!r} {key} drifted: "
+                    f"{rec[key]!r} -> {now.get(key)!r}"
+                )
     return drift
 
 
@@ -71,7 +152,16 @@ def main(argv=None) -> None:
                          "committed BENCH_paper_models.json) and fail on "
                          "crossover drift / section regression / "
                          "bottleneck-attribution change")
+    ap.add_argument("--history", nargs="?", const=HISTORY_DIR, default=None,
+                    metavar="DIR",
+                    help="print the crossover/schedule/overlap trajectory "
+                         "across the archived per-PR reports in DIR "
+                         "(default: benchmarks/history) and exit without "
+                         "running the benchmarks")
     args = ap.parse_args(argv)
+
+    if args.history is not None:
+        raise SystemExit(print_history(args.history))
 
     # load the reference BEFORE running: --json may overwrite the same file
     ref = None
@@ -119,10 +209,12 @@ def main(argv=None) -> None:
     crossovers = getattr(paper_models.registry_crossovers, "last_values", {})
     report = {
         "elapsed_seconds": round(elapsed, 2),
+        "generated_at": round(t0, 3),  # history trajectory ordering
         "sections": results,
         "crossovers_1KiB": crossovers,
         "schedules": getattr(schedules.schedule_search, "last_values", {}),
         "schedule_parity": getattr(schedules.schedule_parity, "last_values", {}),
+        "overlap": getattr(schedules.schedule_overlap, "last_values", {}),
         "ok": all(results.values()),
     }
     try:

@@ -11,15 +11,21 @@ from repro.comms.allreduce import (
     allreduce_flat,
     allreduce_hierarchical,
     allreduce_ring,
+    auto_allreduce_strategy,
     reduce_scatter,
 )
 from repro.comms.alltoall import (
     alltoall,
     alltoall_direct,
     alltoall_hierarchical,
+    auto_alltoall_strategy,
 )
 from repro.comms.allgather import all_gather_axis
 from repro.comms.p2p import halo_exchange, ring_shift
-from repro.comms.autotune import select_allreduce_strategy, select_alltoall_strategy
+from repro.comms.autotune import (
+    select_allreduce_strategy,
+    select_alltoall_strategy,
+    select_schedule,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

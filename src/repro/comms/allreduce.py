@@ -191,6 +191,30 @@ def reduce_scatter(x: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
     return fn(x)
 
 
+def auto_allreduce_strategy(
+    x: jax.Array,
+    mesh: Mesh,
+    slow_axis: str = "pod",
+    fast_axes: Sequence[str] = ("data",),
+) -> str:
+    """Model-driven strategy pick for :func:`allreduce`.
+
+    Consults :mod:`repro.comms.autotune` (event-engine schedule search
+    against the active machine, closed-form planners as fallback) with this
+    mesh's shape and the per-replica payload size.
+    """
+    from repro.comms.autotune import select_allreduce_strategy
+
+    if slow_axis not in mesh.shape:
+        return "flat"
+    bytes_per_chip = float(x.size // max(x.shape[0], 1)) * x.dtype.itemsize
+    # only the participating axes: other mesh axes would inflate the modeled
+    # per-pod chip count and price the wrong machine
+    shape = {a: mesh.shape[a]
+             for a in (slow_axis, *fast_axes) if a in mesh.shape}
+    return select_allreduce_strategy(shape, bytes_per_chip)
+
+
 def allreduce(
     x: jax.Array,
     mesh: Mesh,
@@ -198,7 +222,12 @@ def allreduce(
     slow_axis: str = "pod",
     fast_axes: Sequence[str] = ("data",),
 ) -> jax.Array:
-    """Strategy-dispatched all-reduce over (slow_axis, *fast_axes)."""
+    """Strategy-dispatched all-reduce over (slow_axis, *fast_axes).
+
+    ``strategy="auto"`` asks the performance models (schedule search with
+    closed-form fallback, see :func:`auto_allreduce_strategy`)."""
+    if strategy == "auto":
+        strategy = auto_allreduce_strategy(x, mesh, slow_axis, fast_axes)
     if strategy == "flat" or slow_axis not in mesh.shape:
         axes = [a for a in (slow_axis, *fast_axes) if a in mesh.shape]
         return allreduce_flat(x, mesh, axes)

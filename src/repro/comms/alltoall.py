@@ -116,14 +116,40 @@ def alltoall_hierarchical(
     )
 
 
+def auto_alltoall_strategy(
+    x: jax.Array, mesh: Mesh, axes: Sequence[str]
+) -> str:
+    """Model-driven strategy pick for :func:`alltoall` — consults
+    :mod:`repro.comms.autotune` (event-engine schedule search against the
+    active machine, closed-form cross-pod plan as fallback) with this
+    mesh's shape and the per-pair block size."""
+    from repro.comms.autotune import select_alltoall_strategy
+
+    axes = tuple(axes)
+    k = _mesh_size(mesh, axes)
+    block_bytes = float(x.size // max(k * k, 1)) * x.dtype.itemsize
+    # only the participating axes: other mesh axes would inflate the modeled
+    # per-pod chip count and price the wrong machine
+    shape = {a: mesh.shape[a] for a in axes}
+    return select_alltoall_strategy(
+        shape, block_bytes, n_msgs=max(k - 1, 1),
+        crosses_pod=("pod" in axes and len(axes) == 2),
+    )
+
+
 def alltoall(
     x: jax.Array,
     mesh: Mesh,
     axes: Sequence[str],
     strategy: str = "direct",
 ) -> jax.Array:
-    """Strategy-dispatched all-to-all over the given mesh axes."""
+    """Strategy-dispatched all-to-all over the given mesh axes.
+
+    ``strategy="auto"`` asks the performance models (schedule search with
+    closed-form fallback, see :func:`auto_alltoall_strategy`)."""
     axes = tuple(axes)
+    if strategy == "auto":
+        strategy = auto_alltoall_strategy(x, mesh, axes)
     if strategy == "direct" or len(axes) == 1:
         return alltoall_direct(x, mesh, axes)
     if strategy == "hierarchical":

@@ -171,13 +171,64 @@ def _topo_from_mesh_shape(
     return topo
 
 
+# Schedule-search winners -> repro.comms wrapper strategies.  The search
+# names either a declared path strategy or a library schedule; a winner with
+# no wrapper equivalent (e.g. Bruck) means the event engine preferred an
+# algorithm the wrappers don't implement — the closed-form plan decides then.
+#
+# For the all-reduce the search prices the cross-pod SHARD exchange (the
+# hierarchical schedule's middle phase): a staging variant winning it is
+# evidence pod-staging pays, but "direct" winning only says which DCN path
+# that exchange should use — it does NOT rate flat-vs-hierarchical, so it
+# is deliberately unmapped and defers to plan_tpu_allreduce's full
+# schedule-vs-schedule comparison.
+_SCHEDULE_TO_ALLREDUCE = {
+    "strategy:staged": "hierarchical",
+    "strategy:multirail": "hierarchical",
+}
+_SCHEDULE_TO_ALLTOALL = {
+    "strategy:direct": "direct",
+    "strategy:staged": "hierarchical",
+    "strategy:multirail": "hierarchical",
+    "node_aware_alltoall": "hierarchical",
+}
+
+
+def _schedule_pick(
+    mapping: Dict[str, str], topo: TpuPodTopology, nbytes: float, n_msgs: int
+) -> Optional[str]:
+    """Consult the event-engine schedule search for a wrapper strategy.
+
+    Returns None when the search cannot decide (winner has no wrapper
+    equivalent, or the machine cannot lower the candidates) — callers fall
+    back to the closed-form planners.
+    """
+    try:
+        pick = select_schedule(
+            machine_for(topo), nbytes, max(int(n_msgs), 1)
+        )
+    except Exception:  # noqa: BLE001 — any lowering failure means "no pick"
+        return None
+    return mapping.get(pick)
+
+
 def select_allreduce_strategy(
     mesh_shape: Dict[str, int], bytes_per_chip: float, machine: Optional[str] = None
 ) -> str:
-    """flat vs hierarchical gradient all-reduce, from the models."""
+    """flat vs hierarchical gradient all-reduce, from the models.
+
+    Consults :func:`select_schedule` first (the event-engine search over the
+    cross-pod shard exchange — ``set_active_machine``-aware via the mesh
+    topology resolution), then falls back to the closed-form
+    :func:`~repro.core.planner.plan_tpu_allreduce` ranking.
+    """
     topo = _topo_from_mesh_shape(mesh_shape, machine)
     if topo.pods == 1:
         return "flat"  # no slow tier to stage around
+    shard = bytes_per_chip / max(topo.chips_per_pod, 1)
+    pick = _schedule_pick(_SCHEDULE_TO_ALLREDUCE, topo, shard, topo.pods - 1)
+    if pick is not None:
+        return pick
     plan = plan_tpu_allreduce(topo, bytes_per_chip)
     return {"flat_ring": "flat", "pod_hierarchical": "hierarchical"}[plan.strategy]
 
@@ -189,10 +240,18 @@ def select_alltoall_strategy(
     crosses_pod: bool = False,
     machine: Optional[str] = None,
 ) -> str:
-    """direct vs hierarchical all-to-all (MoE dispatch), from the models."""
+    """direct vs hierarchical all-to-all (MoE dispatch), from the models.
+
+    Like :func:`select_allreduce_strategy`: the event-engine schedule search
+    decides when its winner maps onto a wrapper strategy; otherwise the
+    closed-form cross-pod plan does.
+    """
     if not crosses_pod or mesh_shape.get("pod", 1) == 1:
         return "direct"
     topo = _topo_from_mesh_shape(mesh_shape, machine)
+    pick = _schedule_pick(_SCHEDULE_TO_ALLTOALL, topo, bytes_per_chip, n_msgs)
+    if pick is not None:
+        return pick
     plan = plan_tpu_crosspod(topo, bytes_per_chip, n_msgs=n_msgs)
     return {"direct": "direct", "staged": "hierarchical", "multirail": "hierarchical"}[
         plan.strategy

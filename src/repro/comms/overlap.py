@@ -15,7 +15,7 @@ the dataflow graph*.  These helpers create that separation:
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,19 +58,63 @@ def chunked_collective(
     x: jax.Array,
     n_chunks: int,
     axis: int = 1,
+    pad_value: Optional[float] = 0,
 ) -> jax.Array:
     """Apply ``collective`` to n_chunks independent slices along ``axis``
     (default 1 — axis 0 is the replica dim in the comms wrapper contract).
 
     The chunks are separate HLO ops, so the scheduler may pipeline them with
     surrounding compute; numerics are identical to one monolithic call.
+
+    When ``axis``'s length does not divide ``n_chunks``, the input is padded
+    with ``pad_value`` and the padding removed from each chunk's output.
+    ``pad_value`` must be the identity of the collective's reduction (0 for
+    sum — the default; ``+inf`` for min, ``-inf`` for max); pass
+    ``pad_value=None`` to reject padding outright (ValueError) when no safe
+    identity exists.  Collectives that multiply the chunk axis (all-gather
+    along it returns one padded block per participant) are un-padded
+    per-block, not by slicing the concatenated output — the blocks keep
+    their interleaved order and only the padding is dropped.
     """
     n = x.shape[axis]
     pad = (-n) % n_chunks
-    if pad:
-        widths = [(0, 0)] * x.ndim
-        widths[axis] = (0, pad)
-        x = jnp.pad(x, widths)
-    parts = jnp.split(x, n_chunks, axis=axis)
-    out = jnp.concatenate([collective(p) for p in parts], axis=axis)
-    return jax.lax.slice_in_dim(out, 0, n, axis=axis) if pad else out
+    if pad == 0:
+        parts = jnp.split(x, n_chunks, axis=axis)
+        return jnp.concatenate([collective(p) for p in parts], axis=axis)
+    if pad_value is None:
+        raise ValueError(
+            f"chunked_collective: axis {axis} length {n} is not divisible by "
+            f"n_chunks={n_chunks} and pad_value=None forbids padding (no "
+            f"safe identity for this collective's reduction)"
+        )
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    xp = jnp.pad(x, widths, constant_values=pad_value)
+    chunk_len = xp.shape[axis] // n_chunks
+    parts = jnp.split(xp, n_chunks, axis=axis)
+    outs = [collective(p) for p in parts]
+    factor, rem = divmod(outs[0].shape[axis], chunk_len)
+    if rem:
+        raise ValueError(
+            f"chunked_collective: collective changed the chunk axis from "
+            f"{chunk_len} to {outs[0].shape[axis]} — not an integer multiple, "
+            f"so padding cannot be removed faithfully"
+        )
+    trimmed = []
+    for i, out in enumerate(outs):
+        # valid (unpadded) length of chunk i: padding lives at the global end
+        valid = min(max(n - i * chunk_len, 0), chunk_len)
+        if valid == 0:
+            continue  # chunk was pure padding
+        if valid == chunk_len:
+            trimmed.append(out)
+            continue
+        # the output holds `factor` blocks, each a padded chunk image: drop
+        # the padding from every block, preserving block order
+        moved = jnp.moveaxis(out, axis, 0)
+        blocks = jnp.reshape(moved, (factor, chunk_len) + moved.shape[1:])
+        moved = jnp.reshape(
+            blocks[:, :valid], (factor * valid,) + moved.shape[1:]
+        )
+        trimmed.append(jnp.moveaxis(moved, 0, axis))
+    return jnp.concatenate(trimmed, axis=axis)

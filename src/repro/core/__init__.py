@@ -85,8 +85,13 @@ from repro.core.events import (
 from repro.core.schedule import (
     best_schedule,
     candidate_schedules,
+    chain_schedules,
+    compose_schedules,
+    flat_ring_allreduce_schedule,
+    hierarchical_allreduce_schedule,
     lower_path,
     lower_strategy,
+    moe_alltoall_schedules,
     search_schedules,
     simulate_schedule,
 )

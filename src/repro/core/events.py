@@ -63,6 +63,11 @@ class Step:
     ``cap_bound`` marks that the bandwidth rate came from the node-aggregate
     injection cap ``beta_N`` rather than the per-lane transport rate —
     :func:`bottleneck_report` aggregates these to name the binding term.
+
+    ``release`` is the earliest wall-clock time the step may start,
+    independent of dependencies — how :func:`repro.core.schedule.
+    compose_schedules` places whole schedules at a start offset.  A step is
+    ready at ``max(release, latest dep end)``.
     """
 
     name: str
@@ -75,10 +80,13 @@ class Step:
     cap_bound: bool = False
     nbytes: float = 0.0
     n_msgs: float = 0.0
+    release: float = 0.0
 
     def __post_init__(self):
         if self.duration < 0:
             raise ValueError(f"step {self.name!r}: negative duration")
+        if self.release < 0:
+            raise ValueError(f"step {self.name!r}: negative release time")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,7 +207,7 @@ def run_schedule(schedule: Schedule) -> SimResult:
     for st in schedule.steps:
         if missing[st.name] == 0:
             ready.append(st.name)
-            ready_time[st.name] = 0.0
+            ready_time[st.name] = st.release
             ready_blocker[st.name] = None
 
     def slot_release(rname: str, at: float) -> Tuple[float, Optional[str]]:
@@ -245,7 +253,12 @@ def run_schedule(schedule: Schedule) -> SimResult:
             heapq.heappush(heap, (end, name))
         for dep_name in dependents[name]:
             missing[dep_name] -= 1
-            prev = ready_time.get(dep_name, 0.0)
+            prev = ready_time.get(dep_name)
+            if prev is None:
+                # first dep to finish: the floor is the step's release time
+                prev = steps[dep_name].release
+                ready_time[dep_name] = prev
+                ready_blocker[dep_name] = None
             if end >= prev:
                 ready_time[dep_name] = end
                 ready_blocker[dep_name] = name

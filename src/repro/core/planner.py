@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -30,7 +29,6 @@ from repro.core.machine import (
     resolve_spec as _spec,
 )
 from repro.core.params import Locality
-from repro.core.paths import TpuPathModels
 from repro.core.topology import GpuNodeTopology, TpuPodTopology
 
 
@@ -195,17 +193,15 @@ def plan_tpu_crosspod(
 
 
 def plan_tpu_allreduce(topo: TpuPodTopology, bytes_per_chip: float) -> Plan:
-    """Gradient all-reduce: flat ring over all chips vs pod-hierarchical."""
-    flat_axis = topo.total_chips
-    flat = simulate.ring_allreduce_time(topo, bytes_per_chip, flat_axis)
-    if topo.pods > 1:
-        # flat ring crossing DCN pays DCN beta on the slowest links: model the
-        # cross-pod steps at DCN rate for 2*(pods) of the steps.
-        models = TpuPathModels(topo)
-        shard = bytes_per_chip / flat_axis
-        flat += 2 * topo.pods * float(
-            np.asarray(models.tpu_direct_time(shard, 1))
-        )
+    """Gradient all-reduce: flat ring over all chips (its 2·pods DCN-crossing
+    hops priced inside the schedule) vs pod-hierarchical — both executed on
+    the event engine."""
+    from repro.core.events import run_schedule
+    from repro.core.schedule import flat_ring_allreduce_schedule
+
+    flat = run_schedule(
+        flat_ring_allreduce_schedule(topo, bytes_per_chip)
+    ).makespan
     hier = simulate.hierarchical_allreduce_time(topo, bytes_per_chip)
     return _mk_plan({"flat_ring": flat, "pod_hierarchical": hier})
 
@@ -242,10 +238,12 @@ def plan_moe_alltoall(
     spread over n_experts peer buckets (n_msgs ~ experts)."""
     payload = tokens_per_chip * top_k * d_model * bytes_per_elt
     if not crosses_pod:
-        # intra-pod: direct a2a over ICI vs gathered (staged) — direct is the
-        # baseline; staged only models the (rare) tiny-payload latency win.
-        models = TpuPathModels(topo)
-        direct = float(np.asarray(models.ici_time(payload, hops=topo.torus_x // 2, links=topo.system.ici_links_per_chip))) + topo.system.ici_alpha * (n_experts - 1)
-        onehop = float(np.asarray(models.ici_time(payload, hops=1, links=topo.system.ici_links_per_chip))) + topo.system.ici_alpha * int(math.log2(max(n_experts, 2)))
-        return _mk_plan({"direct_a2a": direct, "tree_a2a": onehop})
+        # intra-pod: direct a2a over ICI (per-expert messages queueing on the
+        # chip's links, paying the real torus ring distance) vs tree — both
+        # lowered to schedules and executed on the event engine.
+        from repro.core.events import run_schedule
+        from repro.core.schedule import moe_alltoall_schedules
+
+        scheds = moe_alltoall_schedules(topo, payload, n_experts)
+        return _mk_plan({k: run_schedule(s).makespan for k, s in scheds.items()})
     return plan_tpu_crosspod(topo, payload, n_msgs=n_experts)

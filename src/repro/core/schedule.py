@@ -24,6 +24,15 @@ finite.  This module provides the three layers on top of the raw engine:
    rank by simulated makespan; :func:`repro.core.planner.plan_schedule_search`
    and :mod:`repro.comms.autotune` consume this.
 
+4. :func:`compose_schedules` / :func:`chain_schedules` — merge step DAGs
+   onto ONE shared resource pool (namespaced steps, resources merged by
+   name), overlapped at start offsets or chained into sequential phases.
+   This is how two collectives contending for the same NIC lanes / copy
+   engines / core pools are priced, and how the multi-phase TPU lowerings
+   (:func:`hierarchical_allreduce_schedule`,
+   :func:`flat_ring_allreduce_schedule`, :func:`moe_alltoall_schedules`)
+   are assembled (DESIGN.md §6).
+
 ``capacity_overrides`` restricts resource capacities below the lane count —
 the contention experiments: the engine's time then *dominates* the
 optimistic closed form, and :func:`repro.core.events.bottleneck_report`
@@ -31,8 +40,9 @@ names the queue.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Dict, List, Mapping, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.core.events import (
     BottleneckReport,
@@ -271,6 +281,129 @@ def simulate_schedule(
 
 
 # --------------------------------------------------------------------------
+# Schedule composition: many schedules, one machine's resources.
+#
+# The engine already executes any DAG against shared finite resources; what
+# it could not express is "these two collectives run on the SAME machine at
+# the same time".  compose_schedules merges step DAGs into one schedule:
+# step names are namespaced per part, and resources are merged BY NAME — a
+# resource two parts both declare (the machine's NIC lanes, copy engines,
+# core pools) becomes one shared pool, which is exactly the cross-collective
+# queueing the paper's multi-transfer regime needs priced.
+#
+# Invariants (pinned in tests/test_compose.py):
+#   * parts with disjoint resources compose to max(offset_i + makespan_i);
+#   * parts sharing a capacity-limited resource can only be slower than
+#     that, and bottleneck_report names the shared resource;
+#   * permuting part order or step declaration order changes neither the
+#     makespan nor the attribution (the engine is deterministic greedy-list).
+# --------------------------------------------------------------------------
+
+SchedulePart = Union[Schedule, Tuple[Schedule, float]]
+
+
+def _part_sinks(sched: Schedule) -> Tuple[str, ...]:
+    """Steps no other step of the same schedule depends on (stage exits)."""
+    depended = {d for st in sched.steps for d in st.deps}
+    return tuple(st.name for st in sched.steps if st.name not in depended)
+
+
+def compose_schedules(
+    spec: Union[str, MachineSpec, None],
+    parts: Sequence[SchedulePart],
+    *,
+    name: Optional[str] = None,
+    chain: bool = False,
+    capacity_overrides: Optional[Mapping[str, int]] = None,
+) -> Schedule:
+    """Merge schedules onto one shared resource pool.
+
+    ``parts`` is a sequence of ``Schedule`` or ``(Schedule, start_offset)``
+    pairs; an offset is the earliest wall-clock time any of that part's
+    steps may start (``Step.release``), so two collectives can be launched
+    staggered.  Step names are namespaced ``{part_name}#{i}/{step}``;
+    resources are merged by name and must agree on capacity (they describe
+    the same physical machine — pass ``capacity_overrides`` to restrict the
+    merged pool).
+
+    ``chain=True`` additionally serializes the parts: each part's entry
+    steps depend on the previous non-empty part's exit steps — sequential
+    phase composition (the hierarchical all-reduce lowering), as opposed to
+    the default overlapped composition.
+
+    ``spec`` only brands the composed schedule's name (pass the machine the
+    parts were lowered for, or None); the resource pool itself comes from
+    the parts.
+    """
+    norm: List[Tuple[Schedule, float]] = []
+    for part in parts:
+        if isinstance(part, Schedule):
+            norm.append((part, 0.0))
+        else:
+            sched, offset = part
+            norm.append((sched, float(offset)))
+            if offset < 0:
+                raise ValueError(
+                    f"part {sched.name!r}: negative start offset {offset}"
+                )
+
+    resources: Dict[str, Resource] = {}
+    steps: List[Step] = []
+    prev_exits: Tuple[str, ...] = ()
+    for i, (sched, offset) in enumerate(norm):
+        prefix = f"{sched.name}#{i}/"
+        for rname, res in sched.resources.items():
+            cur = resources.get(rname)
+            if cur is None:
+                resources[rname] = res
+            elif cur.capacity != res.capacity:
+                raise ValueError(
+                    f"composed parts disagree on resource {rname!r} capacity "
+                    f"({cur.capacity} vs {res.capacity} in {sched.name!r}); "
+                    f"shared resources describe one machine — use "
+                    f"capacity_overrides to restrict the merged pool"
+                )
+        for st in sched.steps:
+            deps = tuple(prefix + d for d in st.deps)
+            if chain and not deps:
+                deps = prev_exits
+            steps.append(dataclasses.replace(
+                st, name=prefix + st.name, deps=deps,
+                release=st.release + offset,
+            ))
+        if chain and sched.steps:
+            prev_exits = tuple(prefix + s for s in _part_sinks(sched))
+
+    for rname, cap in (capacity_overrides or {}).items():
+        if rname in resources:
+            resources[rname] = Resource(rname, cap)
+
+    if name is None:
+        brand = "" if spec is None else f"{resolve_spec(spec).name}:"
+        mode = "chain" if chain else "compose"
+        name = f"{brand}{mode}({'+'.join(s.name for s, _ in norm)})"
+    return Schedule(
+        name=name, steps=tuple(steps), resources=resources,
+        description=f"{'chained' if chain else 'overlapped'} composition of "
+                    f"{len(norm)} schedules on shared resources",
+    )
+
+
+def chain_schedules(
+    spec: Union[str, MachineSpec, None],
+    parts: Sequence[Schedule],
+    *,
+    name: Optional[str] = None,
+    capacity_overrides: Optional[Mapping[str, int]] = None,
+) -> Schedule:
+    """Sequential phase composition (see :func:`compose_schedules`)."""
+    return compose_schedules(
+        spec, list(parts), name=name, chain=True,
+        capacity_overrides=capacity_overrides,
+    )
+
+
+# --------------------------------------------------------------------------
 # Schedule library: multi-step collective algorithms (ring, recursive
 # doubling/halving, Bruck, node-aware two-level).  All costs come from the
 # machine's tiers; ``ranks`` expands symmetric participants into separate
@@ -290,9 +423,18 @@ def _round_robin(
     alpha_extra: float = 0.0,
     lanes_per_rank: int = 1,
 ) -> None:
-    """Emit ``rounds`` barrier-synchronized rounds for ``ranks`` peers."""
+    """Emit ``rounds`` barrier-synchronized rounds for ``ranks`` peers.
+
+    Each rank's steps occupy the per-rank link pool ``{tier}.rank{r}``,
+    sized to the tier's full lane width — one shared name and capacity
+    across every library schedule on the machine, so
+    :func:`compose_schedules` merges the pools and cross-collective
+    queueing on the same physical links is priced (restrict with
+    ``capacity_overrides`` to force it).
+    """
     links = [
-        b.resource(f"{tier.name}.rank{r}", lanes_per_rank) for r in range(ranks)
+        b.resource(f"{tier.name}.rank{r}", max(tier.width, lanes_per_rank))
+        for r in range(ranks)
     ]
     for i, (kind, nbytes, nm) in enumerate(rounds):
         alpha, beta, cap = tier.postal_terms(nbytes / max(nm, 1.0), ppn)
@@ -319,6 +461,7 @@ def ring_allreduce_schedule(
     *,
     directions: int = 2,
     ranks: int = 1,
+    ppn: float = 1.0,
     locality: Locality = Locality.OFF_NODE,
     name: Optional[str] = None,
 ) -> Schedule:
@@ -334,7 +477,36 @@ def ring_allreduce_schedule(
         chunk = bytes_per_rank / axis_size / directions
         rounds = [("reduce", chunk, 1.0)] * (axis_size - 1)
         rounds += [("send", chunk, 1.0)] * (axis_size - 1)
-        _round_robin(b, spec, tier, rounds, ranks=ranks,
+        _round_robin(b, spec, tier, rounds, ranks=ranks, ppn=ppn,
+                     lanes_per_rank=directions)
+    return b.build()
+
+
+def ring_reduce_scatter_schedule(
+    spec: Union[str, MachineSpec],
+    tier_name: str,
+    axis_size: int,
+    bytes_per_rank: float,
+    *,
+    directions: int = 2,
+    ranks: int = 1,
+    ppn: float = 1.0,
+    locality: Locality = Locality.OFF_NODE,
+    name: Optional[str] = None,
+) -> Schedule:
+    """(k-1) reduce rounds, each moving S/k per link (split over
+    ``directions``) — the first half of the ring all-reduce, ending with
+    each rank holding its 1/k reduced shard."""
+    spec = resolve_spec(spec)
+    tier = spec.resolve_tier(tier_name, locality)
+    b = ScheduleBuilder(
+        name or f"{spec.name}:ring_reduce_scatter[{axis_size}]",
+        f"ring reduce-scatter over {tier_name}, axis {axis_size}",
+    )
+    if axis_size > 1:
+        chunk = bytes_per_rank / axis_size / directions
+        rounds = [("reduce", chunk, 1.0)] * (axis_size - 1)
+        _round_robin(b, spec, tier, rounds, ranks=ranks, ppn=ppn,
                      lanes_per_rank=directions)
     return b.build()
 
@@ -345,19 +517,24 @@ def ring_allgather_schedule(
     axis_size: int,
     bytes_per_rank: float,
     *,
+    directions: int = 1,
     ranks: int = 1,
+    ppn: float = 1.0,
     locality: Locality = Locality.OFF_NODE,
+    name: Optional[str] = None,
 ) -> Schedule:
-    """(k-1) rounds each forwarding one S-sized block around the ring."""
+    """(k-1) rounds each forwarding one S-sized block around the ring
+    (block split over ``directions`` when bidirectional)."""
     spec = resolve_spec(spec)
     tier = spec.resolve_tier(tier_name, locality)
     b = ScheduleBuilder(
-        f"{spec.name}:ring_allgather[{axis_size}]",
+        name or f"{spec.name}:ring_allgather[{axis_size}]",
         f"ring all-gather over {tier_name}",
     )
     if axis_size > 1:
-        rounds = [("send", bytes_per_rank, 1.0)] * (axis_size - 1)
-        _round_robin(b, spec, tier, rounds, ranks=ranks)
+        rounds = [("send", bytes_per_rank / directions, 1.0)] * (axis_size - 1)
+        _round_robin(b, spec, tier, rounds, ranks=ranks, ppn=ppn,
+                     lanes_per_rank=directions)
     return b.build()
 
 
@@ -546,6 +723,171 @@ def ep_dispatch_schedules(
             "hierarchical",
             [("stage", float(inner - 1)), ("send", float(outer - 1))],
         ),
+    }
+
+
+# --------------------------------------------------------------------------
+# TPU collective lowerings (formerly TpuPathModels closed forms in
+# simulate.hierarchical_allreduce_time / planner.plan_tpu_allreduce /
+# planner.plan_moe_alltoall): every phase is a schedule, phases are chained
+# with compose_schedules, and the event engine prices the whole thing.
+# --------------------------------------------------------------------------
+
+def hierarchical_allreduce_schedule(
+    topo,
+    bytes_per_chip: float,
+    *,
+    capacity_overrides: Optional[Mapping[str, int]] = None,
+) -> Schedule:
+    """Pod-hierarchical all-reduce as a chained composition of phases:
+
+    1. in-pod ring reduce-scatter over the x then y torus axes, leaving each
+       chip with its 1/chips_per_pod reduced shard;
+    2. cross-pod ring all-reduce of the shards over DCN — every host injects
+       (``ppn = hosts_per_pod``), rounds of shard/pods;
+    3. in-pod ring all-gather (y then x) redistributing the now globally-
+       reduced shards — the phase the old closed form forgot (it summed two
+       *full* in-pod all-reduces and never gathered the cross-pod results;
+       the in-pod byte/alpha totals coincide, but the cross-pod exchange is
+       now an explicit ring paying per-round DCN latency instead of one
+       aggregate message).
+    """
+    from repro.core.machine import machine_for
+
+    spec = machine_for(topo)
+    B = float(bytes_per_chip)
+    x, y = topo.torus_x, topo.torus_y
+    shard = B / topo.chips_per_pod
+    parts: List[Schedule] = [
+        ring_reduce_scatter_schedule(
+            spec, "ici", x, B, directions=2, name=f"{spec.name}:rs_x[{x}]"),
+        ring_reduce_scatter_schedule(
+            spec, "ici", y, B / x, directions=2, name=f"{spec.name}:rs_y[{y}]"),
+    ]
+    if topo.pods > 1:
+        parts.append(ring_allreduce_schedule(
+            spec, "dcn", topo.pods, shard, directions=1,
+            ppn=topo.hosts_per_pod, name=f"{spec.name}:crosspod[{topo.pods}]",
+        ))
+    parts += [
+        ring_allgather_schedule(
+            spec, "ici", y, shard, directions=2,
+            name=f"{spec.name}:ag_y[{y}]"),
+        ring_allgather_schedule(
+            spec, "ici", x, B / x, directions=2,
+            name=f"{spec.name}:ag_x[{x}]"),
+    ]
+    return compose_schedules(
+        spec, parts, chain=True, capacity_overrides=capacity_overrides,
+        name=f"{spec.name}:hierarchical_allreduce[{topo.pods}x{x}x{y}]",
+    )
+
+
+def flat_ring_allreduce_schedule(
+    topo,
+    bytes_per_chip: float,
+    *,
+    capacity_overrides: Optional[Mapping[str, int]] = None,
+) -> Schedule:
+    """Flat bidirectional ring over ALL chips, pods included: the ICI ring
+    schedule chained with the 2·pods ring hops that cross DCN (each carrying
+    one S/chips ring chunk at DCN latency/rate, all hosts injecting) —
+    formerly an additive ``tpu_direct_time`` penalty in plan_tpu_allreduce."""
+    from repro.core.machine import machine_for
+
+    spec = machine_for(topo)
+    k = topo.total_chips
+    B = float(bytes_per_chip)
+    parts: List[Schedule] = [ring_allreduce_schedule(
+        spec, "ici", k, B, directions=2, name=f"{spec.name}:flat_ici[{k}]",
+    )]
+    if topo.pods > 1:
+        tier = spec.resolve_tier("dcn")
+        chunk = B / k
+        b = ScheduleBuilder(
+            f"{spec.name}:flat_dcn_hops[{2 * topo.pods}]",
+            "ring hops crossing pod boundaries, priced at DCN rate",
+        )
+        _round_robin(
+            b, spec, tier, [("send", chunk, 1.0)] * (2 * topo.pods),
+            ppn=topo.hosts_per_pod,
+        )
+        parts.append(b.build())
+    return compose_schedules(
+        spec, parts, chain=True, capacity_overrides=capacity_overrides,
+        name=f"{spec.name}:flat_ring_allreduce[{k}]",
+    )
+
+
+def moe_alltoall_schedules(
+    topo,
+    payload_bytes: float,
+    n_experts: int,
+    *,
+    capacity_overrides: Optional[Mapping[str, int]] = None,
+) -> Dict[str, Schedule]:
+    """Intra-pod MoE dispatch all-to-all candidates, lowered to ICI schedules.
+
+    ``direct_a2a``: one phase of (E-1) per-expert messages queueing on the
+    chip's ICI links; each message crosses the torus at the real ring
+    distance of the crossed axes (``x//2 + y//2`` hops — on a 1xN torus the
+    x ring is degenerate and the y ring's diameter is what must be paid).
+
+    ``tree_a2a``: ceil(log2 E) barrier-chained rounds of neighbour hops,
+    each re-sending half the payload (Bruck-style latency/bandwidth trade).
+    """
+    from repro.core.machine import machine_for
+
+    spec = machine_for(topo)
+    tier = spec.resolve_tier("ici")
+    links = int(spec.fact("ici_links", 1))
+    E = max(int(n_experts), 1)
+    s = float(payload_bytes)
+    # ring distance of the axes a direct message crosses (torus diameter);
+    # a 1xN factorization must price the live axis, not the degenerate one
+    hops = max(topo.torus_x // 2 + topo.torus_y // 2, 1)
+    hop_alpha = float(spec.fact("ici_hop_alpha", 0.0))
+
+    direct = ScheduleBuilder(
+        f"{spec.name}:moe_direct_a2a[{E}]",
+        f"direct expert all-to-all: {E - 1} messages at {hops} torus hops",
+    )
+    # same per-rank link pool name/capacity as the ring library, so
+    # compose_schedules merges it with any other ICI schedule's pool
+    if E > 1:
+        res = direct.resource(f"{tier.name}.rank0", max(tier.width, links))
+        per_msg = s / (E - 1)
+        alpha, beta, cap = tier.postal_terms(per_msg, 1)
+        alpha = alpha + hop_alpha * max(hops - 1, 0)
+        direct.barrier(tuple(
+            direct.step(
+                f"peer{i}", alpha + beta * per_msg, resources=(res,),
+                kind="send", alpha_time=alpha, beta_time=beta * per_msg,
+                cap_bound=cap, nbytes=per_msg, n_msgs=1.0,
+            )
+            for i in range(E - 1)
+        ))
+
+    tree = ScheduleBuilder(
+        f"{spec.name}:moe_tree_a2a[{E}]",
+        f"tree (Bruck-style) expert all-to-all: log2({E}) neighbour rounds",
+    )
+    n_rounds = int(math.ceil(math.log2(E))) if E > 1 else 0
+    if n_rounds:
+        res = tree.resource(f"{tier.name}.rank0", max(tier.width, links))
+        per_round = s / 2
+        alpha, beta, cap = tier.postal_terms(per_round, 1)
+        for i in range(n_rounds):
+            b_t = beta * per_round / links
+            tree.barrier((tree.step(
+                f"round{i}", alpha + b_t, resources=(res,),
+                kind="send", alpha_time=alpha, beta_time=b_t,
+                cap_bound=cap, nbytes=per_round, n_msgs=1.0,
+            ),))
+
+    return {
+        "direct_a2a": direct.build(capacity_overrides),
+        "tree_a2a": tree.build(capacity_overrides),
     }
 
 

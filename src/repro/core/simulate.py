@@ -142,16 +142,12 @@ def ring_allreduce_time(topo: TpuPodTopology, bytes_per_chip: float, axis_size: 
 
 
 def hierarchical_allreduce_time(topo: TpuPodTopology, bytes_per_chip: float) -> float:
-    """Pod-aware: reduce-scatter in pod, cross-pod all-reduce of 1/chips
-    shards over DCN (all hosts inject), all-gather in pod."""
-    from repro.core.paths import TpuPathModels
+    """Pod-aware: reduce-scatter in pod, cross-pod ring all-reduce of the
+    1/chips shards over DCN (all hosts inject), all-gather in pod — a
+    chained schedule composition executed by the event engine
+    (:func:`repro.core.schedule.hierarchical_allreduce_schedule`)."""
+    from repro.core.events import run_schedule
+    from repro.core.schedule import hierarchical_allreduce_schedule
 
-    in_pod = ring_allreduce_time(topo, bytes_per_chip, topo.torus_x) + ring_allreduce_time(
-        topo, bytes_per_chip / topo.torus_x, topo.torus_y
-    )
-    if topo.pods == 1:
-        return in_pod
-    shard = bytes_per_chip / topo.chips_per_pod
-    models = TpuPathModels(topo)
-    cross = _t(models.tpu_direct_time(shard * 2 * (topo.pods - 1) / topo.pods, 1))
-    return in_pod + cross
+    sched = hierarchical_allreduce_schedule(topo, bytes_per_chip)
+    return run_schedule(sched).makespan

@@ -82,7 +82,9 @@ class TpuPodTopology:
 
     @property
     def hosts_per_pod(self) -> int:
-        return self.chips_per_pod // self.system.chips_per_host
+        # a pod smaller than one host still has one host driving it (the
+        # mesh-shaped selectors produce tiny per-pod chip counts)
+        return max(self.chips_per_pod // self.system.chips_per_host, 1)
 
     def coords(self, chip: int) -> Tuple[int, int, int]:
         """chip id -> (pod, x, y)."""

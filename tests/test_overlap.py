@@ -1,0 +1,75 @@
+"""chunked_collective pad/slice correctness (repro/comms/overlap.py).
+
+The old implementation zero-padded the chunk axis and sliced the
+concatenated output back to the original length — silently wrong for
+non-additive reductions (min/max see the injected zeros) and for
+size-multiplying collectives (an all-gather along the chunk axis returns
+one *padded* block per participant, so slicing the concatenation keeps the
+padding and drops real data).  These are pure-function tests: the
+"collective" stand-ins mimic the shape/semantics of the real ones without
+needing a multi-device mesh.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms.overlap import chunked_collective
+
+
+def test_divisible_fast_path_identity():
+    x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+    out = chunked_collective(lambda p: 2 * p, x, n_chunks=2, axis=1)
+    np.testing.assert_allclose(np.asarray(out), 2 * np.asarray(x))
+
+
+def test_padded_identity_collective_roundtrips():
+    x = jnp.arange(10, dtype=jnp.float32).reshape(2, 5)
+    out = chunked_collective(lambda p: p, x, n_chunks=2, axis=1)
+    assert out.shape == x.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_size_multiplying_collective_unpads_per_block():
+    """Stand-in for a 2-participant all-gather along the chunk axis: each
+    chunk's output is [chunk, chunk].  With n=3 split into 2 chunks of 2,
+    the second chunk is [3, pad]; the correct output drops the pad from
+    BOTH of its gathered blocks instead of slicing the concatenation."""
+    gather2 = lambda p: jnp.concatenate([p, p], axis=1)  # noqa: E731
+    x = jnp.asarray([[1.0, 2.0, 3.0]])
+    out = chunked_collective(gather2, x, n_chunks=2, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(out), [[1.0, 2.0, 1.0, 2.0, 3.0, 3.0]]
+    )
+    # old behavior: concat -> [1,2,1,2,3,pad,3,pad], sliced to n=3 -> [1,2,1]
+    assert out.shape[1] == 2 * x.shape[1]
+
+
+def test_non_additive_reduction_with_identity_pad():
+    """Stand-in for an all-reduce-min whose reduction spans the chunk axis:
+    zero padding corrupts it (min picks up the injected 0); padding with the
+    reduction's identity (+inf) keeps the chunked result exact."""
+    gmin = lambda p: jnp.full_like(p, p.min())  # noqa: E731
+    x = jnp.asarray([[5.0, 4.0, 3.0]])
+    out = chunked_collective(gmin, x, n_chunks=2, axis=1, pad_value=jnp.inf)
+    np.testing.assert_allclose(np.asarray(out), [[4.0, 4.0, 3.0]])
+
+
+def test_non_additive_reduction_rejected_without_identity():
+    x = jnp.asarray([[5.0, 4.0, 3.0]])
+    with pytest.raises(ValueError, match="not divisible"):
+        chunked_collective(lambda p: p, x, n_chunks=2, axis=1, pad_value=None)
+
+
+def test_pure_padding_chunk_dropped():
+    """n < n_chunks: trailing chunks are pure padding and must vanish from
+    the output instead of leaking pad values."""
+    x = jnp.asarray([[7.0, 9.0]])
+    out = chunked_collective(lambda p: p, x, n_chunks=4, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_non_integer_growth_factor_rejected():
+    weird = lambda p: jnp.concatenate([p, p[:, :1]], axis=1)  # noqa: E731
+    x = jnp.asarray([[1.0, 2.0, 3.0]])
+    with pytest.raises(ValueError, match="integer multiple"):
+        chunked_collective(weird, x, n_chunks=2, axis=1)
