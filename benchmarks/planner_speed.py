@@ -1,0 +1,136 @@
+"""Planner throughput: the production-fast planning proof (run.py section).
+
+Three measurements, all exported into ``BENCH_paper_models.json`` and gated
+by ``run.py --compare``:
+
+* ``warm vs cold select_schedule`` — a cold plan clears the plan cache and
+  the lowering memo, so every call pays lower + simulate + rank; a warm
+  plan is a cache probe.  Gate: >= 10x.
+* ``engine speedup`` — the event-driven ``run_schedule`` vs the verbatim
+  ``run_schedule_reference`` greedy scan on the largest library schedule
+  (64-rank bidirectional ring all-reduce, ~8k steps).  Gate: >= 2x.
+* ``pick parity`` — cached and uncached selection agree on a sweep of
+  sizes x machines.  Gate: zero drift (the caches may only change *speed*,
+  never a decision).
+
+Timing goes through :func:`repro.comms.autotune.measured_autotune` — the
+same min-of-reps/warmup code path the model-vs-measured validation loop
+uses, so planner timings and collective timings share one methodology.
+"""
+from __future__ import annotations
+
+from repro.comms.autotune import (
+    clear_plan_cache,
+    measured_autotune,
+    select_schedule,
+)
+from repro.core.events import run_schedule, run_schedule_reference
+from repro.core.machine import get_machine
+from repro.core.schedule import clear_schedule_cache, ring_allreduce_schedule
+
+WARM_SPEEDUP_GATE = 10.0
+ENGINE_SPEEDUP_GATE = 2.0
+
+# the warm/cold probe problem: a mid-size batch on the paper's main machine
+PLAN_MACHINE, PLAN_BYTES, PLAN_MSGS = "summit", 4096.0, 8
+
+# pick-parity sweep: power-of-two sizes land in distinct log2 buckets, so a
+# cached pick can only ever be the one computed for that exact size — any
+# disagreement is a cache-coherence bug, not bucketing error
+PARITY_MACHINES = ("summit", "lassen", "tpu_v5e")
+PARITY_SIZES = tuple(float(1 << p) for p in range(6, 25, 2))
+PARITY_MSGS = 8
+
+
+def _clear_all() -> None:
+    clear_plan_cache()
+    clear_schedule_cache()
+
+
+def planner_speed() -> bool:
+    print("# planner: cold/warm plans per second + engine steps per second")
+
+    # -- warm vs cold select_schedule ------------------------------------
+    def cold_plan() -> None:
+        _clear_all()
+        select_schedule(PLAN_MACHINE, PLAN_BYTES, PLAN_MSGS)
+
+    def warm_plan() -> None:
+        select_schedule(PLAN_MACHINE, PLAN_BYTES, PLAN_MSGS)
+
+    rec = measured_autotune(
+        {"cold": cold_plan, "warm": warm_plan}, model_pick="warm",
+        reps=5, warmup=1,
+    )
+    t_cold, t_warm = rec.measured["cold"], rec.measured["warm"]
+    warm_speedup = t_cold / t_warm
+    print(f"planner_speed,select_schedule,cold={1.0 / t_cold:.0f}/s,"
+          f"warm={1.0 / t_warm:.0f}/s,warm_speedup={warm_speedup:.0f}x")
+
+    # -- engine vs reference on the largest library schedule -------------
+    spec = get_machine("summit")
+    _clear_all()
+    ring = ring_allreduce_schedule(
+        spec, "gpu_net", 64, float(1 << 22), ranks=64,
+        name="summit:ring_allreduce[64x64]",
+    )
+    n_steps = len(ring.steps)
+    rec = measured_autotune(
+        {
+            "event": lambda: run_schedule(ring),
+            "reference": lambda: run_schedule_reference(ring),
+        },
+        model_pick="event", reps=3, warmup=1,
+    )
+    t_event, t_ref = rec.measured["event"], rec.measured["reference"]
+    engine_speedup = t_ref / t_event
+    print(f"planner_speed,engine,steps={n_steps},"
+          f"event={n_steps / t_event:.0f}steps/s,"
+          f"reference={n_steps / t_ref:.0f}steps/s,"
+          f"engine_speedup={engine_speedup:.2f}x")
+
+    # -- pick parity: cached == uncached across sizes x machines ---------
+    drift = []
+    _clear_all()
+    cached = {}
+    for m in PARITY_MACHINES:
+        for s in PARITY_SIZES:
+            cached[(m, s)] = select_schedule(m, s, PARITY_MSGS)
+            # second call serves from the plan cache; must agree with itself
+            if select_schedule(m, s, PARITY_MSGS) != cached[(m, s)]:
+                drift.append(f"{m}@{int(s)}:warm-repeat")
+    for m in PARITY_MACHINES:
+        for s in PARITY_SIZES:
+            _clear_all()
+            uncached = select_schedule(m, s, PARITY_MSGS)
+            if uncached != cached[(m, s)]:
+                drift.append(
+                    f"{m}@{int(s)}:{cached[(m, s)]}!={uncached}"
+                )
+    n_picks = len(PARITY_MACHINES) * len(PARITY_SIZES)
+    print(f"planner_speed,pick_parity,checked={n_picks},drift={len(drift)}"
+          + ("" if not drift else "," + ";".join(drift[:4])))
+
+    planner_speed.last_values = {
+        "cold_plans_per_sec": 1.0 / t_cold,
+        "warm_plans_per_sec": 1.0 / t_warm,
+        "warm_speedup": warm_speedup,
+        "engine_steps": n_steps,
+        "engine_steps_per_sec": n_steps / t_event,
+        "reference_steps_per_sec": n_steps / t_ref,
+        "engine_speedup": engine_speedup,
+        "pick_parity_checked": n_picks,
+        "pick_parity": not drift,
+    }
+    ok = (warm_speedup >= WARM_SPEEDUP_GATE
+          and engine_speedup >= ENGINE_SPEEDUP_GATE
+          and not drift)
+    if not ok:
+        print(f"planner_speed,FAIL,warm={warm_speedup:.1f}x"
+              f"(need {WARM_SPEEDUP_GATE:.0f}x),"
+              f"engine={engine_speedup:.2f}x"
+              f"(need {ENGINE_SPEEDUP_GATE:.0f}x),drift={len(drift)}")
+    return ok
+
+
+ALL = [planner_speed]

@@ -1,0 +1,181 @@
+"""Render the run.py --history trajectory as an SVG plot artifact.
+
+Stdlib-only (no matplotlib in the CI image): reads the archived per-PR
+reports in ``benchmarks/history/``, orders them by their ``generated_at``
+stamp (same rule as ``run.py --history``), and writes one SVG with
+
+* a line panel per numeric trajectory — the Fig-5 crossover message counts,
+  the overlap speedups, and the planner_speed warm/engine speedups;
+* a text ribbon of the schedule-search winners per report, so attribution
+  flips are visible at a glance.
+
+    PYTHONPATH=src python -m benchmarks.plot_history \
+        [--history-dir DIR] [--out SVG]
+
+Exit codes mirror ``run.py --history``: 0 on success, 3 when fewer than two
+reports exist (nothing to plot — not a failure in a fresh checkout).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+HISTORY_DIR = os.path.join(os.path.dirname(__file__), "history")
+DEFAULT_OUT = os.path.join(HISTORY_DIR, "trajectory.svg")
+
+PANEL_W, PANEL_H, MARGIN = 640, 120, 54
+COLORS = ("#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b")
+
+
+def load_reports(history_dir: str) -> List[Tuple[str, dict]]:
+    try:
+        names = [f for f in os.listdir(history_dir) if f.endswith(".json")]
+    except OSError:
+        return []
+    reports = []
+    for fname in sorted(names):
+        try:
+            with open(os.path.join(history_dir, fname)) as f:
+                reports.append((os.path.splitext(fname)[0], json.load(f)))
+        except (OSError, ValueError):
+            continue
+    reports.sort(key=lambda kv: kv[1].get("generated_at", 0.0))
+    return reports
+
+
+def _series(reports, getter) -> List[Optional[float]]:
+    vals: List[Optional[float]] = []
+    for _, rep in reports:
+        try:
+            v = getter(rep)
+            vals.append(float(v))
+        except (KeyError, TypeError, ValueError):
+            vals.append(None)
+    return vals
+
+
+def collect_panels(reports) -> List[Tuple[str, Dict[str, List[Optional[float]]]]]:
+    """(panel title, {series label: values}) — one panel per quantity family."""
+    panels = []
+    xnames = sorted({k for _, r in reports for k in r.get("crossovers_1KiB", {})})
+    if xnames:
+        panels.append(("crossover message count (1 KiB)", {
+            n: _series(reports, lambda r, n=n: r["crossovers_1KiB"][n])
+            for n in xnames
+        }))
+    pairs = sorted({k for _, r in reports for k in r.get("overlap", {})})
+    if pairs:
+        panels.append(("overlap speedup vs serial", {
+            p: _series(reports,
+                       lambda r, p=p: r["overlap"][p]["speedup_vs_serial"])
+            for p in pairs
+        }))
+    if any("planner_speed" in r for _, r in reports):
+        panels.append(("planner speedups (log-worthy, plotted linear)", {
+            "warm_plan": _series(
+                reports, lambda r: r["planner_speed"]["warm_speedup"]),
+            "engine": _series(
+                reports, lambda r: r["planner_speed"]["engine_speedup"]),
+        }))
+    return panels
+
+
+def _polyline(vals, lo, hi, y0) -> Tuple[str, List[Tuple[float, float, float]]]:
+    n = len(vals)
+    span = max(hi - lo, 1e-12)
+    pts = []
+    for i, v in enumerate(vals):
+        if v is None:
+            continue
+        x = MARGIN + (PANEL_W - 2 * MARGIN) * (i / max(n - 1, 1))
+        y = y0 + PANEL_H - (PANEL_H - 18) * ((v - lo) / span) - 9
+        pts.append((x, y, v))
+    return " ".join(f"{x:.1f},{y:.1f}" for x, y, _ in pts), pts
+
+
+def render_svg(reports) -> str:
+    shas = [sha for sha, _ in reports]
+    panels = collect_panels(reports)
+    winners = sorted({k for _, r in reports for k in r.get("schedules", {})})
+    ribbon_h = 16 * len(winners) + 28 if winners else 0
+    height = 30 + len(panels) * (PANEL_H + 40) + ribbon_h + 20
+    out = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{PANEL_W}" '
+        f'height="{height}" font-family="monospace" font-size="11">',
+        '<rect width="100%" height="100%" fill="white"/>',
+        f'<text x="{MARGIN}" y="18" font-size="13">benchmark trajectory: '
+        f'{" &#8594; ".join(shas)}</text>',
+    ]
+    y0 = 30
+    for title, series in panels:
+        flat = [v for vals in series.values() for v in vals if v is not None]
+        if not flat:
+            continue
+        lo, hi = min(flat), max(flat)
+        if lo == hi:
+            lo, hi = lo - 0.5, hi + 0.5
+        out.append(f'<text x="{MARGIN}" y="{y0 + 12}">{title}</text>')
+        out.append(
+            f'<rect x="{MARGIN}" y="{y0 + 18}" '
+            f'width="{PANEL_W - 2 * MARGIN}" height="{PANEL_H - 18}" '
+            f'fill="none" stroke="#ccc"/>'
+        )
+        out.append(f'<text x="{MARGIN - 48}" y="{y0 + 30}">{hi:.3g}</text>')
+        out.append(f'<text x="{MARGIN - 48}" y="{y0 + PANEL_H}">{lo:.3g}</text>')
+        for ci, (label, vals) in enumerate(sorted(series.items())):
+            color = COLORS[ci % len(COLORS)]
+            line, pts = _polyline(vals, lo, hi, y0 + 18)
+            if line:
+                out.append(f'<polyline points="{line}" fill="none" '
+                           f'stroke="{color}" stroke-width="1.5"/>')
+                for x, y, _ in pts:
+                    out.append(f'<circle cx="{x:.1f}" cy="{y:.1f}" r="2.5" '
+                               f'fill="{color}"/>')
+            out.append(
+                f'<text x="{PANEL_W - MARGIN + 4}" '
+                f'y="{y0 + 30 + 13 * ci}" fill="{color}">{label[:20]}</text>'
+            )
+        for i, sha in enumerate(shas):
+            x = MARGIN + (PANEL_W - 2 * MARGIN) * (i / max(len(shas) - 1, 1))
+            out.append(f'<text x="{x - 18:.1f}" y="{y0 + PANEL_H + 14}" '
+                       f'fill="#888">{sha[:7]}</text>')
+        y0 += PANEL_H + 40
+    if winners:
+        out.append(f'<text x="{MARGIN}" y="{y0 + 12}">schedule-search '
+                   f'winner per report</text>')
+        for wi, regime in enumerate(winners):
+            bests = []
+            for _, rep in reports:
+                rec = rep.get("schedules", {}).get(regime)
+                bests.append("?" if rec is None else str(rec.get("best")))
+            out.append(
+                f'<text x="{MARGIN}" y="{y0 + 28 + 16 * wi}" fill="#444">'
+                f'{regime}: {" &#8594; ".join(bests)}</text>'
+            )
+    out.append("</svg>")
+    return "\n".join(out)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history-dir", default=HISTORY_DIR)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    reports = load_reports(args.history_dir)
+    if len(reports) < 2:
+        print(f"# {len(reports)} report(s) in {args.history_dir}; "
+              "need >= 2 to plot a trajectory")
+        return 3
+    svg = render_svg(reports)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(svg)
+    print(f"# wrote {os.path.relpath(args.out)} "
+          f"({len(reports)} reports plotted)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -85,6 +85,13 @@ def print_history(history_dir: str) -> int:
     for pair in pairs:
         print(f"  overlap   {pair:<28} speedup_vs_serial: " + fmt(series(
             lambda r, k=pair: round(r["overlap"][k]["speedup_vs_serial"], 3))))
+    if any("planner_speed" in r for _, r in reports):
+        print("  planner   warm_speedup             " + fmt(series(
+            lambda r: round(r["planner_speed"]["warm_speedup"], 1))))
+        print("  planner   engine_speedup           " + fmt(series(
+            lambda r: round(r["planner_speed"]["engine_speedup"], 2))))
+        print("  planner   pick_parity              " + fmt(series(
+            lambda r: r["planner_speed"]["pick_parity"])))
     fails = series(
         lambda r: sorted(k for k, v in r.get("sections", {}).items() if not v)
     )
@@ -139,6 +146,22 @@ def compare_reports(new: dict, ref: dict) -> list:
                     f"overlap {pair!r} {key} drifted: "
                     f"{rec[key]!r} -> {now.get(key)!r}"
                 )
+    # planner_speed: gate the *decision* fields only (pick parity and the
+    # presence of the warm/cold measurements).  Raw plans/sec and the exact
+    # speedup ratios are machine-dependent and may shift run to run — the
+    # >=10x / >=2x floors are enforced inside the section itself.
+    ref_ps = ref.get("planner_speed", {})
+    new_ps = new.get("planner_speed", {})
+    if ref_ps:
+        if not new_ps:
+            drift.append("planner_speed section disappeared")
+        else:
+            if ref_ps.get("pick_parity") and not new_ps.get("pick_parity"):
+                drift.append("planner_speed pick_parity regressed: "
+                             "cached and uncached selection disagree")
+            for key in ("warm_speedup", "engine_speedup"):
+                if key in ref_ps and key not in new_ps:
+                    drift.append(f"planner_speed {key!r} disappeared")
     return drift
 
 
@@ -173,11 +196,12 @@ def main(argv=None) -> None:
             print(f"# cannot load compare reference {args.compare}: {e}")
             raise SystemExit(2)
 
-    from benchmarks import paper_models, schedules, tpu_planner
+    from benchmarks import paper_models, planner_speed, schedules, tpu_planner
 
     results = {}
     t0 = time.time()
-    for fn in paper_models.ALL + tpu_planner.ALL + schedules.ALL:
+    for fn in (paper_models.ALL + tpu_planner.ALL + schedules.ALL
+               + planner_speed.ALL):
         name = fn.__name__
         try:
             results[name] = bool(fn())
@@ -215,6 +239,7 @@ def main(argv=None) -> None:
         "schedules": getattr(schedules.schedule_search, "last_values", {}),
         "schedule_parity": getattr(schedules.schedule_parity, "last_values", {}),
         "overlap": getattr(schedules.schedule_overlap, "last_values", {}),
+        "planner_speed": getattr(planner_speed.planner_speed, "last_values", {}),
         "ok": all(results.values()),
     }
     try:

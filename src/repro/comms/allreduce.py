@@ -202,6 +202,12 @@ def auto_allreduce_strategy(
     Consults :mod:`repro.comms.autotune` (event-engine schedule search
     against the active machine, closed-form planners as fallback) with this
     mesh's shape and the per-replica payload size.
+
+    Cheap enough to call per collective: the first consultation for a
+    (machine, mesh, payload-bucket) key lowers and simulates candidate
+    schedules; every later one is a plan-cache probe (microseconds — see
+    ``plan_cache_info`` and the planner_speed benchmark), so
+    ``strategy="auto"`` is safe inside a serving or training step loop.
     """
     from repro.comms.autotune import select_allreduce_strategy
 

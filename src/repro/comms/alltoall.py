@@ -122,7 +122,12 @@ def auto_alltoall_strategy(
     """Model-driven strategy pick for :func:`alltoall` — consults
     :mod:`repro.comms.autotune` (event-engine schedule search against the
     active machine, closed-form cross-pod plan as fallback) with this
-    mesh's shape and the per-pair block size."""
+    mesh's shape and the per-pair block size.
+
+    Per-call affordable: repeat consultations for the same (machine, mesh,
+    payload-bucket) hit the autotune plan cache instead of re-running the
+    schedule search, so MoE dispatch can re-select per step as routed token
+    counts shift the payload across bucket boundaries."""
     from repro.comms.autotune import select_alltoall_strategy
 
     axes = tuple(axes)

@@ -13,8 +13,11 @@ candidates live and records which one the model would have picked
 from __future__ import annotations
 
 import dataclasses
+import logging
+import math
 import time
-from typing import Callable, Dict, Optional, Sequence, Union
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -22,6 +25,7 @@ from repro.core.machine import (
     MachineSpec,
     machine_for,
     plan_costs,
+    registry_generation,
     resolve_spec,
     simulate_strategies,
 )
@@ -43,16 +47,102 @@ from repro.core.topology import TpuPodTopology
 _DEFAULT_MACHINE = "tpu_v5e"
 _ACTIVE_MACHINE: str = _DEFAULT_MACHINE
 
+_log = logging.getLogger(__name__)
+
 
 def set_active_machine(name: str) -> str:
-    """Switch the default machine the selectors consult (returns the old)."""
+    """Switch the default machine the selectors consult (returns the old).
+
+    Also drops the plan cache: cached decisions may have been resolved
+    against the previous default."""
     global _ACTIVE_MACHINE
     old, _ACTIVE_MACHINE = _ACTIVE_MACHINE, name
+    clear_plan_cache()
     return old
 
 
 def active_machine() -> str:
     return _ACTIVE_MACHINE
+
+
+# --------------------------------------------------------------------------
+# Plan cache: memoized select_* decisions for the hot path.
+#
+# Selection is deterministic given (machine structure, problem shape), so
+# the wrappers in comms.allreduce / comms.alltoall and the serving loop can
+# afford a model consultation *per collective call*: a warm lookup is a dict
+# probe instead of a full lower-and-simulate pass.
+#
+# Keys quantize payload size to log2 buckets (_BUCKETS_PER_OCTAVE per
+# doubling): two sizes in one bucket differ by at most a factor of
+# 2**(1/8) ~ 1.09, and postal-model costs satisfy T(lambda*s) <= lambda*T(s)
+# for lambda >= 1 (alpha is size-independent), so a cached pick is within
+# 2**(2/8) ~ 1.19x of optimal for any size sharing the bucket — well inside
+# the margin separating the models' crossovers (DESIGN.md §7).  Exact sizes
+# whose buckets differ never share an entry, so a sweep of distinct octaves
+# (the pick-parity gate in benchmarks/planner_speed.py) sees zero drift.
+#
+# Invalidation: every key embeds the resolved MachineSpec.fingerprint (and
+# the mesh topology for the mesh-shaped selectors); additionally the whole
+# cache is dropped when the machine registry generation changes (any
+# register_machine call, e.g. re-registering a live refit) or when
+# set_active_machine switches the default.
+# --------------------------------------------------------------------------
+
+_BUCKETS_PER_OCTAVE = 8
+_PLAN_CACHE: "OrderedDict[tuple, str]" = OrderedDict()
+_PLAN_CACHE_MAX = 4096
+_PLAN_CACHE_GEN = -1
+_PLAN_CACHE_HITS = 0
+_PLAN_CACHE_MISSES = 0
+
+
+def clear_plan_cache() -> None:
+    """Drop every cached plan decision."""
+    global _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_HITS = 0
+    _PLAN_CACHE_MISSES = 0
+
+
+def plan_cache_info() -> Dict[str, int]:
+    return {
+        "entries": len(_PLAN_CACHE),
+        "hits": _PLAN_CACHE_HITS,
+        "misses": _PLAN_CACHE_MISSES,
+        "max_entries": _PLAN_CACHE_MAX,
+    }
+
+
+def _bucket(nbytes: float) -> int:
+    """log2 payload bucket: 8 buckets per doubling, sizes <= 1 share one."""
+    if nbytes <= 1.0:
+        return 0
+    return int(round(_BUCKETS_PER_OCTAVE * math.log2(float(nbytes))))
+
+
+def _plan_cached(key: tuple, compute: Callable[[], str]) -> str:
+    global _PLAN_CACHE_GEN, _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
+    gen = registry_generation()
+    if gen != _PLAN_CACHE_GEN:
+        # a machine was (re-)registered since the cache was filled
+        _PLAN_CACHE.clear()
+        _PLAN_CACHE_GEN = gen
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        _PLAN_CACHE_HITS += 1
+        _PLAN_CACHE.move_to_end(key)
+        return hit
+    _PLAN_CACHE_MISSES += 1
+    val = compute()
+    _PLAN_CACHE[key] = val
+    if len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return val
+
+
+def _mesh_topo_key(topo: "TpuPodTopology") -> Tuple[int, int, int]:
+    return (topo.pods, topo.torus_x, topo.torus_y)
 
 
 def _resolve(machine: Union[str, MachineSpec, None]) -> MachineSpec:
@@ -68,8 +158,15 @@ def select_transfer_path(
     """Best declared path variant for a message batch on ANY registered
     machine — the §V decision (GPUDirect vs 3-step / direct vs staged),
     driven purely by the machine's spec."""
-    costs = plan_costs(_resolve(machine), nbytes_per_msg, n_msgs, locality=locality)
-    return min(costs, key=costs.get)
+    spec = _resolve(machine)
+    key = ("path", spec.fingerprint, _bucket(nbytes_per_msg),
+           int(n_msgs), locality.value)
+
+    def compute() -> str:
+        costs = plan_costs(spec, nbytes_per_msg, n_msgs, locality=locality)
+        return min(costs, key=costs.get)
+
+    return _plan_cached(key, compute)
 
 
 def select_collective_strategy(
@@ -80,10 +177,17 @@ def select_collective_strategy(
 ) -> str:
     """Best declared collective strategy (the §VI decision) for ANY
     registered machine, including live-fitted ones."""
-    costs = simulate_strategies(
-        _resolve(machine), nbytes_per_msg, n_msgs, split_messages=split_messages
-    )
-    return min(costs, key=costs.get)
+    spec = _resolve(machine)
+    key = ("collective", spec.fingerprint, _bucket(nbytes_per_msg),
+           int(n_msgs), split_messages)
+
+    def compute() -> str:
+        costs = simulate_strategies(
+            spec, nbytes_per_msg, n_msgs, split_messages=split_messages
+        )
+        return min(costs, key=costs.get)
+
+    return _plan_cached(key, compute)
 
 
 def select_schedule(
@@ -99,11 +203,18 @@ def select_schedule(
     (Bruck, node-aware two-level, ...) by simulated makespan, so multi-step
     schedules the closed forms cannot express compete on equal footing.
     Names are ``strategy:<declared>`` or a library schedule name."""
-    plan = plan_schedule_search(
-        _resolve(machine), nbytes_per_msg, n_msgs,
-        peers=peers, split_messages=split_messages,
-    )
-    return plan.strategy
+    spec = _resolve(machine)
+    key = ("schedule", spec.fingerprint, _bucket(nbytes_per_msg),
+           int(n_msgs), split_messages, peers)
+
+    def compute() -> str:
+        plan = plan_schedule_search(
+            spec, nbytes_per_msg, n_msgs,
+            peers=peers, split_messages=split_messages,
+        )
+        return plan.strategy
+
+    return _plan_cached(key, compute)
 
 
 def explain_bottleneck(
@@ -207,7 +318,16 @@ def _schedule_pick(
         pick = select_schedule(
             machine_for(topo), nbytes, max(int(n_msgs), 1)
         )
-    except Exception:  # noqa: BLE001 — any lowering failure means "no pick"
+    except (KeyError, ValueError) as exc:
+        # the expected lowering failures: a machine without the candidate's
+        # tiers/paths/facts (KeyError) or an unlowerable problem shape
+        # (ValueError).  Anything else is an engine bug and must propagate —
+        # a blanket except here silently downgraded every auto-selection to
+        # the closed-form fallback.
+        _log.debug(
+            "schedule search failed on machine %r (nbytes=%s, n_msgs=%s): %s",
+            topo.machine, nbytes, n_msgs, exc,
+        )
         return None
     return mapping.get(pick)
 
@@ -225,12 +345,18 @@ def select_allreduce_strategy(
     topo = _topo_from_mesh_shape(mesh_shape, machine)
     if topo.pods == 1:
         return "flat"  # no slow tier to stage around
-    shard = bytes_per_chip / max(topo.chips_per_pod, 1)
-    pick = _schedule_pick(_SCHEDULE_TO_ALLREDUCE, topo, shard, topo.pods - 1)
-    if pick is not None:
-        return pick
-    plan = plan_tpu_allreduce(topo, bytes_per_chip)
-    return {"flat_ring": "flat", "pod_hierarchical": "hierarchical"}[plan.strategy]
+    key = ("allreduce", machine_for(topo).fingerprint, _mesh_topo_key(topo),
+           _bucket(bytes_per_chip))
+
+    def compute() -> str:
+        shard = bytes_per_chip / max(topo.chips_per_pod, 1)
+        pick = _schedule_pick(_SCHEDULE_TO_ALLREDUCE, topo, shard, topo.pods - 1)
+        if pick is not None:
+            return pick
+        plan = plan_tpu_allreduce(topo, bytes_per_chip)
+        return {"flat_ring": "flat", "pod_hierarchical": "hierarchical"}[plan.strategy]
+
+    return _plan_cached(key, compute)
 
 
 def select_alltoall_strategy(
@@ -249,13 +375,20 @@ def select_alltoall_strategy(
     if not crosses_pod or mesh_shape.get("pod", 1) == 1:
         return "direct"
     topo = _topo_from_mesh_shape(mesh_shape, machine)
-    pick = _schedule_pick(_SCHEDULE_TO_ALLTOALL, topo, bytes_per_chip, n_msgs)
-    if pick is not None:
-        return pick
-    plan = plan_tpu_crosspod(topo, bytes_per_chip, n_msgs=n_msgs)
-    return {"direct": "direct", "staged": "hierarchical", "multirail": "hierarchical"}[
-        plan.strategy
-    ]
+    key = ("alltoall", machine_for(topo).fingerprint, _mesh_topo_key(topo),
+           _bucket(bytes_per_chip), int(n_msgs))
+
+    def compute() -> str:
+        pick = _schedule_pick(_SCHEDULE_TO_ALLTOALL, topo, bytes_per_chip, n_msgs)
+        if pick is not None:
+            return pick
+        plan = plan_tpu_crosspod(topo, bytes_per_chip, n_msgs=n_msgs)
+        return {
+            "direct": "direct", "staged": "hierarchical",
+            "multirail": "hierarchical",
+        }[plan.strategy]
+
+    return _plan_cached(key, compute)
 
 
 def select_moe_dispatch_strategy(
@@ -284,21 +417,49 @@ class AutotuneRecord:
     agreed: bool
 
 
+# Timing source for measured_autotune.  time.perf_counter is specified to
+# be monotonic, but that property is load-bearing here (a clock stepping
+# backwards would turn min-of-reps into garbage), so assert it once at
+# import instead of trusting the platform.
+_CLOCK = time.perf_counter
+assert time.get_clock_info("perf_counter").monotonic, (
+    "measured_autotune needs a monotonic timer; perf_counter is not "
+    "monotonic on this platform"
+)
+
+
 def measured_autotune(
     candidates: Dict[str, Callable[[], None]],
     model_pick: str,
     reps: int = 5,
+    warmup: int = 1,
 ) -> AutotuneRecord:
     """Run each candidate, take min-of-reps, pick the fastest; record whether
-    the model agreed (the paper's model-validation loop, §VI)."""
+    the model agreed (the paper's model-validation loop, §VI).
+
+    ``warmup`` calls run first and are discarded — they absorb one-time
+    costs (JIT compilation, cache population) so ``reps`` measures the
+    steady state.  Min-of-reps (not mean) is the right statistic for a
+    deterministic operation timed on a noisy host: noise only ever adds.
+
+    Example — timing planner warm-path throughput (benchmarks/planner_speed
+    routes its model-vs-measured timing through this single code path)::
+
+        rec = measured_autotune(
+            {"warm": lambda: select_schedule("summit", 4096.0, 8)},
+            model_pick="warm", reps=5, warmup=1,
+        )
+        plans_per_sec = 1.0 / rec.measured["warm"]
+    """
     measured: Dict[str, float] = {}
     for name, fn in candidates.items():
-        fn()  # warmup / compile
+        for _ in range(max(warmup, 0)):
+            fn()  # discard: compile/JIT/cache-fill
         best = float("inf")
         for _ in range(reps):
-            t0 = time.perf_counter()
+            t0 = _CLOCK()
             fn()
-            best = min(best, time.perf_counter() - t0)
+            best = min(best, _CLOCK() - t0)
         measured[name] = best
     pick = min(measured, key=measured.get)
     return AutotuneRecord(

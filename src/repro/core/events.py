@@ -25,6 +25,18 @@ Durations are *inputs* (the schedule builder prices steps with the machine's
 ``TransportTier`` postal models), so a schedule whose steps never contend
 reproduces the analytic cost to float round-off; a schedule whose steps do
 contend can only be slower.  ``tests/test_schedule.py`` pins both directions.
+
+Two implementations share those semantics bit-for-bit (DESIGN.md §7):
+
+* :func:`run_schedule` — event-driven: a lazy priority queue of candidate
+  (start, declaration-seq) keys with recompute-on-pop, and O(1) per-resource
+  free-slot lookups off the holder heaps.  O((V + E + W·log V)) for V steps,
+  E dep edges, W queue entries (W is V plus one re-push per key change).
+* :func:`run_schedule_reference` — the original quadratic scan (every pick
+  re-examines all ready steps and re-sorts holder lists), kept as the
+  executable specification; ``tests/test_engine_parity.py`` pins exact
+  equality of makespan, per-step start/end/ready, blocker and blocked_on
+  on randomized DAGs and every library schedule.
 """
 from __future__ import annotations
 
@@ -148,10 +160,20 @@ class SimResult:
     traces: Mapping[str, StepTrace]
 
     def critical_path(self) -> List[StepTrace]:
-        """Blocking chain ending at the step that defines the makespan."""
+        """Blocking chain ending at the step that defines the makespan.
+
+        On exact ``end`` ties the trace with the larger ``queue_wait`` wins
+        (the one that actually sat in a queue carries the attribution);
+        step name is only the final, deterministic tie-break — so the
+        chain is stable under the ``{part}#{i}/{step}`` renaming that
+        :func:`repro.core.schedule.compose_schedules` introduces.
+        """
         if not self.traces:
             return []
-        last = max(self.traces.values(), key=lambda t: (t.end, t.step.name))
+        last = max(
+            self.traces.values(),
+            key=lambda t: (t.end, t.queue_wait, t.step.name),
+        )
         chain = [last]
         seen = {last.step.name}
         while chain[-1].blocker is not None:
@@ -186,7 +208,169 @@ class SimResult:
 
 
 def run_schedule(schedule: Schedule) -> SimResult:
-    """Execute the DAG with greedy earliest-start list scheduling."""
+    """Execute the DAG with greedy earliest-start list scheduling.
+
+    Event-driven implementation: semantically identical to
+    :func:`run_schedule_reference` (exact same floats, blockers and
+    tie-breaks — pinned by tests/test_engine_parity.py) but near-linear.
+
+    Two structural facts make it work:
+
+    * **Full-heap invariant.**  After every commit's prune-then-push, a
+      resource's holder heap has at most ``capacity`` entries: the committed
+      step's start is >= the time at which <= capacity-1 holders survive
+      (that is what its key said), so the prune pops the rest.  Hence the
+      reference's ``slot_release`` — copy all holders, filter, sort — reduces
+      to an O(1) peek: the heap root (min by ``(end, name)``, the exact
+      reference tie-break) is the next slot release iff the heap is full and
+      its root ends after the query time.
+    * **Lazy keys with recompute-on-pop.**  Each ready step's earliest
+      feasible ``(start, declaration_seq)`` key only *increases* as other
+      steps commit — except when a commit's prune pops >= 2 entries from a
+      full heap (the reference's capacity quirk: holders with coincident
+      ends all vacate at once and waiters' feasible starts jump *down*).
+      So the queue pops stale candidates, recomputes against current heap
+      state, and commits only on an exact key match; the rare decrease case
+      is handled eagerly by re-pushing every waiter of the affected
+      resource with its fresh key.
+    """
+    # integer-indexed mirrors of the schedule (string-dict hashing per dep
+    # edge is the dominant constant factor at scale); heap entries keep the
+    # step NAME because the reference tie-break on coincident slot releases
+    # compares (end, name) tuples lexicographically
+    step_list = schedule.steps
+    V = len(step_list)
+    idx_of = {st.name: i for i, st in enumerate(step_list)}
+    res_names = list(schedule.resources)
+    ridx_of = {r: i for i, r in enumerate(res_names)}
+    caps = [schedule.resources[r].capacity for r in res_names]
+    step_res: List[Tuple[int, ...]] = [
+        tuple(ridx_of[r] for r in st.resources) for st in step_list
+    ]
+    dependents: List[List[int]] = [[] for _ in range(V)]
+    missing = [0] * V
+    for i, st in enumerate(step_list):
+        missing[i] = len(st.deps)
+        for d in st.deps:
+            dependents[idx_of[d]].append(i)
+
+    # per-resource: heap of (end, step_name) for slots currently held
+    occupied: List[List[Tuple[float, str]]] = [[] for _ in res_names]
+    # ready, uncommitted steps listing each resource (for the decrease case)
+    waiters: List[set] = [set() for _ in res_names]
+    traces: Dict[str, StepTrace] = {}
+    NOT_READY = -1.0
+    ready_time = [NOT_READY] * V
+    ready_blocker: List[Optional[int]] = [None] * V
+    pq: List[Tuple[float, int]] = []  # (start, seq) candidates
+    # key of one live queue entry per step (dedup: skip pushes that cannot
+    # beat an already-queued candidate); cleared when that entry pops
+    best_key: List[Optional[float]] = [None] * V
+    committed = [False] * V
+    heappush, heappop = heapq.heappush, heapq.heappop
+
+    def earliest(i: int) -> Tuple[float, Optional[str], Optional[int]]:
+        """(feasible start, blocking holder, blocked resource index) — the
+        first resource in declaration order attaining the max, as the
+        reference's strict-greater update rule yields."""
+        start, rblocker, ri_blk = ready_time[i], None, None
+        for ri in step_res[i]:
+            heap = occupied[ri]
+            # full-heap invariant: a slot frees at the root's end iff the
+            # heap holds `capacity` entries all ending after the query time
+            if len(heap) == caps[ri] and heap[0][0] > start:
+                start, rblocker, ri_blk = heap[0][0], heap[0][1], ri
+        return start, rblocker, ri_blk
+
+    def enqueue(i: int, start: Optional[float] = None) -> None:
+        if start is None:
+            start = ready_time[i]
+            for ri in step_res[i]:
+                heap = occupied[ri]
+                if len(heap) == caps[ri] and heap[0][0] > start:
+                    start = heap[0][0]
+        bk = best_key[i]
+        if bk is not None and bk <= start:
+            return  # a queued candidate at bk <= start already covers this
+        best_key[i] = start
+        heappush(pq, (start, i))
+
+    for i, st in enumerate(step_list):
+        if missing[i] == 0:
+            ready_time[i] = st.release
+            for ri in step_res[i]:
+                waiters[ri].add(i)
+            enqueue(i)
+
+    while pq:
+        key_start, i = heappop(pq)
+        if committed[i]:
+            continue  # duplicate candidate of a committed step
+        if best_key[i] == key_start:
+            best_key[i] = None  # the tracked entry is being consumed
+        start, rblocker, ri_blk = earliest(i)
+        if start != key_start:
+            # stale key (keys are copied floats, never arithmetic, so exact
+            # equality is the right staleness test); reinsert and retry
+            enqueue(i, start)
+            continue
+        st = step_list[i]
+        end = start + st.duration
+        if rblocker is not None:
+            blocker, blocked_on = rblocker, res_names[ri_blk]
+        else:
+            bidx = ready_blocker[i]
+            blocker = None if bidx is None else step_list[bidx].name
+            blocked_on = None
+        traces[st.name] = StepTrace(
+            step=st, start=start, end=end, ready=ready_time[i],
+            blocker=blocker, blocked_on=blocked_on,
+        )
+        committed[i] = True
+        for ri in step_res[i]:
+            waiters[ri].discard(i)
+            heap = occupied[ri]
+            was_full = len(heap) == caps[ri]
+            popped = 0
+            while heap and heap[0][0] <= start:
+                heappop(heap)
+                popped += 1
+            heappush(heap, (end, st.name))
+            if was_full and popped >= 2:
+                # the only transition that can *lower* a waiter's feasible
+                # start: a full heap lost >= 2 coincidentally-ending holders
+                for w in waiters[ri]:
+                    enqueue(w)
+        for j in dependents[i]:
+            missing[j] -= 1
+            prev = ready_time[j]
+            if prev == NOT_READY:
+                # first dep to finish: the floor is the step's release time
+                prev = step_list[j].release
+                ready_time[j] = prev
+            if end >= prev:
+                ready_time[j] = end
+                ready_blocker[j] = i
+            if missing[j] == 0:
+                for ri in step_res[j]:
+                    waiters[ri].add(j)
+                enqueue(j)
+
+    if len(traces) != V:
+        unrun = sorted(st.name for i, st in enumerate(step_list)
+                       if not committed[i])
+        raise ValueError(
+            f"schedule {schedule.name!r} has a dependency cycle; "
+            f"unrunnable steps: {unrun[:8]}"
+        )
+    makespan = max((t.end for t in traces.values()), default=0.0)
+    return SimResult(schedule=schedule, makespan=makespan, traces=traces)
+
+
+def run_schedule_reference(schedule: Schedule) -> SimResult:
+    """The original greedy scan — every pick re-examines all ready steps —
+    kept verbatim as the executable specification :func:`run_schedule` is
+    pinned against (O(V²·R·log R) worst case; use only in tests/benches)."""
     steps = {st.name: st for st in schedule.steps}
     seq = {st.name: i for i, st in enumerate(schedule.steps)}
     dependents: Dict[str, List[str]] = {n: [] for n in steps}
@@ -329,28 +513,46 @@ class BottleneckReport:
 
 
 def bottleneck_report(result: SimResult) -> BottleneckReport:
-    """Attribute the makespan: saturated resource + binding cost term."""
+    """Attribute the makespan: saturated resource + binding cost term.
+
+    Single pass over the traces (each trace contributes to every resource
+    it occupies, and its ``queue_wait`` to the one it queued on), instead of
+    one O(V) scan per resource — per-resource accumulation order matches the
+    old per-resource scans, so the sums are bit-identical.
+    """
     chain = result.critical_path()
     critical_names = {t.step.name for t in chain}
-    usages: Dict[str, ResourceUsage] = {}
-    for rname, res in result.schedule.resources.items():
-        busy = crit = alpha_t = beta_t = cap_t = 0.0
-        for t in result.traces.values():
-            if rname not in t.step.resources:
-                continue
-            busy += t.end - t.start
-            if t.step.name in critical_names:
-                crit += t.end - t.start
-                alpha_t += t.step.alpha_time
-                beta_t += t.step.beta_time
+    resources = result.schedule.resources
+    busy = {r: 0.0 for r in resources}
+    qwait = {r: 0.0 for r in resources}
+    crit = {r: 0.0 for r in resources}
+    alpha_t = {r: 0.0 for r in resources}
+    beta_t = {r: 0.0 for r in resources}
+    cap_t = {r: 0.0 for r in resources}
+    for t in result.traces.values():
+        dur = t.end - t.start
+        on_chain = t.step.name in critical_names
+        for rname in t.step.resources:
+            busy[rname] += dur
+            if on_chain:
+                crit[rname] += dur
+                alpha_t[rname] += t.step.alpha_time
+                beta_t[rname] += t.step.beta_time
                 if t.step.cap_bound:
-                    cap_t += t.step.beta_time
+                    cap_t[rname] += t.step.beta_time
+        if t.blocked_on is not None:
+            qwait[t.blocked_on] += t.queue_wait
+    usages: Dict[str, ResourceUsage] = {}
+    for rname, res in resources.items():
+        util = (
+            busy[rname] / (res.capacity * result.makespan)
+            if result.makespan > 0.0 else 0.0
+        )
         usages[rname] = ResourceUsage(
-            name=rname, capacity=res.capacity, busy=busy,
-            utilization=result.utilization(rname),
-            queue_wait=result.queue_wait(rname),
-            critical=crit, alpha_time=alpha_t, beta_time=beta_t,
-            cap_beta_time=cap_t,
+            name=rname, capacity=res.capacity, busy=busy[rname],
+            utilization=util, queue_wait=qwait[rname],
+            critical=crit[rname], alpha_time=alpha_t[rname],
+            beta_time=beta_t[rname], cap_beta_time=cap_t[rname],
         )
     if not usages:
         return BottleneckReport(

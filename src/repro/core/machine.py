@@ -27,6 +27,7 @@ bit (tests/test_machine.py pins equality and the Fig 5 crossovers).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 import numpy as np
@@ -211,6 +212,85 @@ class MachineSpec:
             return name_or_path
         return self.paths[name_or_path]
 
+    @property
+    def fingerprint(self) -> str:
+        """Structural digest of everything that affects planning decisions.
+
+        Two specs with equal fingerprints lower to identical schedules and
+        make identical plan picks, so the fingerprint (not ``name``) is the
+        cache key for lowering memoization (:mod:`repro.core.schedule`) and
+        the plan cache (:mod:`repro.comms.autotune`).  Live-fitted machines
+        from ``spec_from_measurements`` reuse a registry name but carry new
+        postal parameters — their fingerprints differ, so re-registering a
+        refit spec can never serve a stale cached plan.
+
+        Computed once per spec instance and memoized (frozen dataclasses
+        still have a ``__dict__``, so ``object.__setattr__`` is legal).
+        """
+        cached = self.__dict__.get("_fingerprint")
+        if cached is None:
+            payload = repr((
+                self.name,
+                tuple(sorted(self.facts.items())),
+                tuple(sorted(
+                    (k, v.path, v.lanes) for k, v in self.strategies.items()
+                )),
+                tuple(sorted(
+                    (k, v.path, v.lanes) for k, v in self.plan_variants.items()
+                )),
+                tuple(sorted(
+                    (k, _path_signature(p)) for k, p in self.paths.items()
+                )),
+                tuple(sorted(
+                    (k, _tier_signature(t)) for k, t in self.tiers.items()
+                )),
+                self.crossover_paths,
+            ))
+            cached = hashlib.sha1(payload.encode()).hexdigest()
+            object.__setattr__(self, "_fingerprint", cached)
+        return cached
+
+
+def _path_signature(path: Path) -> tuple:
+    return tuple(
+        (t.tier, t.kind, None if t.locality is None else t.locality.value,
+         t.lanes, t.ppn, t.byte_scale, t.alpha_extra, t.split_msgs,
+         t.dedup, t.serialize)
+        for t in path.steps
+    )
+
+
+# sizes at which an unknown fitted model is probed for its fingerprint: one
+# per decade across the byte range the planner sweeps, hitting every
+# protocol segment any realistic threshold layout can produce
+_PROBE_SIZES = (0.0, float(1 << 10), float(1 << 14), float(1 << 18),
+                float(1 << 22), float(1 << 26))
+
+
+def _model_signature(model: object) -> tuple:
+    if isinstance(model, SimplePostalModel):
+        return ("simple", model.params.alpha, model.params.beta)
+    segments = getattr(model, "segments", None)
+    if segments is not None:
+        return (
+            "segmented",
+            tuple(sorted(
+                (proto.value, p.alpha, p.beta) for proto, p in segments.items()
+            )),
+            getattr(model, "short_max", None),
+            getattr(model, "eager_max", None),
+        )
+    # unknown model type: characterize it by its parameters at a size ladder
+    return ("probed", tuple(
+        (s, model.params_for(s).alpha, model.params_for(s).beta)
+        for s in _PROBE_SIZES
+    ))
+
+
+def _tier_signature(tier: TransportTier) -> tuple:
+    return (tier.name, tier.beta_N, tier.width, tier.serialize_alpha,
+            _model_signature(tier.model))
+
 
 # --------------------------------------------------------------------------
 # Generic evaluation.
@@ -394,13 +474,24 @@ def plan_costs(
 
 _REGISTRY: Dict[str, Union[MachineSpec, Callable[..., MachineSpec]]] = {}
 _CACHE: Dict[tuple, MachineSpec] = {}
+# bumped on every (re-)registration; decision caches that key on machine
+# *names* anywhere (the plan cache in comms.autotune) compare this to drop
+# entries resolved against a superseded registration
+_GENERATION = 0
+
+
+def registry_generation() -> int:
+    """Monotone counter incremented by every :func:`register_machine`."""
+    return _GENERATION
 
 
 def register_machine(
     name: str, spec_or_factory: Union[MachineSpec, Callable[..., MachineSpec]]
 ) -> None:
     """Register a spec (or a factory taking shape kwargs) under ``name``."""
+    global _GENERATION
     _REGISTRY[name] = spec_or_factory
+    _GENERATION += 1
     stale = [k for k in _CACHE if k[0] == name]
     for k in stale:
         del _CACHE[k]

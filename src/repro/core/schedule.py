@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.core.events import (
@@ -62,6 +63,70 @@ from repro.core.machine import (
 from repro.core.params import Locality
 
 _COPY_KINDS = ("copy_d2h", "copy_h2d")
+
+
+# --------------------------------------------------------------------------
+# Lowering memoization.
+#
+# Lowering is pure: a (spec, problem) pair always produces the same step
+# DAG, and Schedule/Step/Resource are frozen, so instances can be shared.
+# Entries key on MachineSpec.fingerprint (a structural digest), NOT the
+# registry name — a live refit via ``spec_from_measurements`` produces a new
+# fingerprint and can never collide with the stale spec's entries.  Calls
+# passing ``capacity_overrides`` bypass the cache entirely (the overrides
+# mapping is caller state, not part of the problem).
+# --------------------------------------------------------------------------
+
+_SCHEDULE_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_SCHEDULE_CACHE_MAX = 512
+_SCHEDULE_CACHE_HITS = 0
+_SCHEDULE_CACHE_MISSES = 0
+
+
+def clear_schedule_cache() -> None:
+    """Drop all memoized lowerings (tests; explicit invalidation)."""
+    global _SCHEDULE_CACHE_HITS, _SCHEDULE_CACHE_MISSES
+    _SCHEDULE_CACHE.clear()
+    _SCHEDULE_CACHE_HITS = 0
+    _SCHEDULE_CACHE_MISSES = 0
+
+
+def schedule_cache_info() -> Dict[str, int]:
+    return {
+        "entries": len(_SCHEDULE_CACHE),
+        "hits": _SCHEDULE_CACHE_HITS,
+        "misses": _SCHEDULE_CACHE_MISSES,
+        "max_entries": _SCHEDULE_CACHE_MAX,
+    }
+
+
+def _memo_get(key: tuple):
+    global _SCHEDULE_CACHE_HITS, _SCHEDULE_CACHE_MISSES
+    hit = _SCHEDULE_CACHE.get(key)
+    if hit is not None:
+        _SCHEDULE_CACHE_HITS += 1
+        _SCHEDULE_CACHE.move_to_end(key)
+    else:
+        _SCHEDULE_CACHE_MISSES += 1
+    return hit
+
+
+def _memo_put(key: tuple, value) -> None:
+    _SCHEDULE_CACHE[key] = value
+    if len(_SCHEDULE_CACHE) > _SCHEDULE_CACHE_MAX:
+        _SCHEDULE_CACHE.popitem(last=False)
+
+
+def _topo_key(topo) -> tuple:
+    """Hashable identity of a topology for memo keys (the spec fingerprint
+    alone is not enough: pod count and torus shape live on the topology)."""
+    return (
+        type(topo).__name__,
+        getattr(topo, "pods", None),
+        getattr(topo, "torus_x", None),
+        getattr(topo, "torus_y", None),
+        getattr(topo, "hosts_per_pod", None),
+    )
 
 
 class ScheduleBuilder:
@@ -263,13 +328,24 @@ def lower_strategy(
     """Lower one declared collective strategy (same knobs as strategy_time)."""
     decl = spec.strategies[strategy]
     conc = int(spec.fact("injectors_per_node", 1)) if concurrency is None else concurrency
-    return lower_path(
+    key = None
+    if capacity_overrides is None:
+        key = ("lower_strategy", spec.fingerprint, strategy,
+               float(nbytes_per_msg), float(n_msgs), conc, locality.value,
+               socket, float(dedup_factor), split_messages)
+        hit = _memo_get(key)
+        if hit is not None:
+            return hit
+    sched = lower_path(
         spec, decl.path, nbytes_per_msg, n_msgs,
         lanes=int(spec.value(decl.lanes, default=1)), concurrency=conc,
         locality=locality, socket=socket, dedup_factor=dedup_factor,
         split_messages=split_messages, capacity_overrides=capacity_overrides,
         name=f"{spec.name}:{strategy}",
     )
+    if key is not None:
+        _memo_put(key, sched)
+    return sched
 
 
 def simulate_schedule(
@@ -698,6 +774,11 @@ def ep_dispatch_schedules(
     trade expressed as schedule steps instead of inline postal arithmetic.
     """
     spec = resolve_spec(spec)
+    key = ("ep_dispatch", spec.fingerprint, float(bytes_per_bucket),
+           tuple(group_sizes))
+    hit = _memo_get(key)
+    if hit is not None:
+        return dict(hit)
     tier = spec.resolve_tier("ici")
     links = int(spec.fact("ici_links", 1))
     outer, inner = group_sizes
@@ -717,13 +798,15 @@ def ep_dispatch_schedules(
             ),))
         return b.build()
 
-    return {
+    out = {
         "direct": hop_schedule("direct", [("send", float(P_total - 1))]),
         "hierarchical": hop_schedule(
             "hierarchical",
             [("stage", float(inner - 1)), ("send", float(outer - 1))],
         ),
     }
+    _memo_put(key, dict(out))
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -755,6 +838,13 @@ def hierarchical_allreduce_schedule(
     from repro.core.machine import machine_for
 
     spec = machine_for(topo)
+    key = None
+    if capacity_overrides is None:
+        key = ("hier_allreduce", spec.fingerprint, _topo_key(topo),
+               float(bytes_per_chip))
+        hit = _memo_get(key)
+        if hit is not None:
+            return hit
     B = float(bytes_per_chip)
     x, y = topo.torus_x, topo.torus_y
     shard = B / topo.chips_per_pod
@@ -777,10 +867,13 @@ def hierarchical_allreduce_schedule(
             spec, "ici", x, B / x, directions=2,
             name=f"{spec.name}:ag_x[{x}]"),
     ]
-    return compose_schedules(
+    sched = compose_schedules(
         spec, parts, chain=True, capacity_overrides=capacity_overrides,
         name=f"{spec.name}:hierarchical_allreduce[{topo.pods}x{x}x{y}]",
     )
+    if key is not None:
+        _memo_put(key, sched)
+    return sched
 
 
 def flat_ring_allreduce_schedule(
@@ -796,6 +889,13 @@ def flat_ring_allreduce_schedule(
     from repro.core.machine import machine_for
 
     spec = machine_for(topo)
+    key = None
+    if capacity_overrides is None:
+        key = ("flat_allreduce", spec.fingerprint, _topo_key(topo),
+               float(bytes_per_chip))
+        hit = _memo_get(key)
+        if hit is not None:
+            return hit
     k = topo.total_chips
     B = float(bytes_per_chip)
     parts: List[Schedule] = [ring_allreduce_schedule(
@@ -813,10 +913,13 @@ def flat_ring_allreduce_schedule(
             ppn=topo.hosts_per_pod,
         )
         parts.append(b.build())
-    return compose_schedules(
+    sched = compose_schedules(
         spec, parts, chain=True, capacity_overrides=capacity_overrides,
         name=f"{spec.name}:flat_ring_allreduce[{k}]",
     )
+    if key is not None:
+        _memo_put(key, sched)
+    return sched
 
 
 def moe_alltoall_schedules(
@@ -839,6 +942,13 @@ def moe_alltoall_schedules(
     from repro.core.machine import machine_for
 
     spec = machine_for(topo)
+    key = None
+    if capacity_overrides is None:
+        key = ("moe_a2a", spec.fingerprint, _topo_key(topo),
+               float(payload_bytes), int(n_experts))
+        hit = _memo_get(key)
+        if hit is not None:
+            return dict(hit)
     tier = spec.resolve_tier("ici")
     links = int(spec.fact("ici_links", 1))
     E = max(int(n_experts), 1)
@@ -885,10 +995,13 @@ def moe_alltoall_schedules(
                 cap_bound=cap, nbytes=per_round, n_msgs=1.0,
             ),))
 
-    return {
+    out = {
         "direct_a2a": direct.build(capacity_overrides),
         "tree_a2a": tree.build(capacity_overrides),
     }
+    if key is not None:
+        _memo_put(key, dict(out))
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -914,6 +1027,13 @@ def candidate_schedules(
         int(spec.fact("injectors_per_node", 1))
         if concurrency is None else int(concurrency)
     )
+    key = None
+    if capacity_overrides is None:
+        key = ("candidates", spec.fingerprint, float(nbytes_per_msg),
+               float(n_msgs), peers, split_messages, conc, include_library)
+        hit = _memo_get(key)
+        if hit is not None:
+            return dict(hit)  # fresh dict: callers may mutate their copy
     cands: Dict[str, Schedule] = {}
     for strat in spec.strategies:
         cands[f"strategy:{strat}"] = lower_strategy(
@@ -922,6 +1042,8 @@ def candidate_schedules(
             capacity_overrides=capacity_overrides,
         )
     if not include_library:
+        if key is not None:
+            _memo_put(key, dict(cands))
         return cands
     P = int(peers) if peers is not None else int(n_msgs) + 1
     if P >= 2:
@@ -942,6 +1064,8 @@ def candidate_schedules(
                     spec, nbytes_per_msg, P, ranks_per_node=g,
                     capacity_overrides=capacity_overrides,
                 )
+    if key is not None:
+        _memo_put(key, dict(cands))
     return cands
 
 

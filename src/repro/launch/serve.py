@@ -72,15 +72,30 @@ def main(argv=None):
         functools.partial(dec.decode_step, cfg, dist=dist),
         donate_argnums=(1,),
     )
+    # Per-step planning: re-consult the model-driven strategy pick every
+    # decode step (payload per chip grows with the live KV length, so the
+    # pick can legitimately flip mid-generation).  The autotune plan cache
+    # makes the repeat consultations microsecond probes — planner_speed in
+    # benchmarks/ gates that this stays serving-loop affordable.
+    from repro.comms.autotune import plan_cache_info, select_allreduce_strategy
+
+    plan_shape = dict(mesh.shape)
+    token_bytes = float(B * cfg.d_model) * 2  # bf16 activations per token
     out_tokens = []
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     t0 = time.perf_counter()
     for i in range(N):
         out_tokens.append(np.asarray(tok)[:, 0])
+        collective = select_allreduce_strategy(
+            plan_shape, token_bytes * (P_len + i + 1)
+        )
         logits, caches = decode_fn(params, caches, tok, jnp.int32(P_len + i))
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     jax.block_until_ready(logits)
     t_dec = time.perf_counter() - t0
+    info = plan_cache_info()
+    print(f"[serve] per-step plan: {collective} "
+          f"(plan cache {info['hits']} hits / {info['misses']} misses)")
     gen = np.stack(out_tokens, axis=1)
     print(f"[serve] decoded {N} tokens x {B} seqs in {t_dec:.2f}s "
           f"({B * N / t_dec:.1f} tok/s)")

@@ -6,3 +6,23 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _fresh_planner_caches():
+    """Isolate the planner decision caches between tests.
+
+    Several tests monkeypatch selectors (e.g. test_compose fakes
+    autotune.select_schedule); without this, a fake-derived pick cached
+    under a real key would leak into later tests.
+    """
+    from repro.comms.autotune import clear_plan_cache
+    from repro.core.schedule import clear_schedule_cache
+
+    clear_plan_cache()
+    clear_schedule_cache()
+    yield
+    clear_plan_cache()
+    clear_schedule_cache()

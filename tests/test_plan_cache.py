@@ -1,0 +1,154 @@
+"""Plan/lowering cache coherence: caches never serve stale decisions.
+
+Three invalidation paths, all exercised: the structural MachineSpec
+fingerprint (a refit spec under the same registry name keys differently),
+the registry generation bump (any register_machine call drops the plan
+cache), and the explicit clear in set_active_machine.
+"""
+import numpy as np
+import pytest
+
+from repro.comms import autotune
+from repro.comms.autotune import (
+    clear_plan_cache,
+    plan_cache_info,
+    select_collective_strategy,
+    select_schedule,
+    select_transfer_path,
+)
+from repro.core import schedule as S
+from repro.core.benchmark import spec_from_measurements
+from repro.core.machine import (
+    get_machine,
+    register_machine,
+    registry_generation,
+)
+
+
+def _fitted(name, alpha, beta, register=False):
+    sizes = np.logspace(1, 7, 24)
+    return spec_from_measurements(
+        name, (sizes, alpha + sizes * beta), register=register
+    )
+
+
+# -- fingerprints ----------------------------------------------------------------
+
+def test_fingerprint_stable_and_structural():
+    s = get_machine("summit")
+    assert s.fingerprint == s.fingerprint
+    assert len(s.fingerprint) == 40
+    assert s.fingerprint != get_machine("lassen").fingerprint
+
+
+def test_refit_changes_fingerprint():
+    a = _fitted("fitted_fp", 2e-6, 1e-10)
+    b = _fitted("fitted_fp", 4e-6, 2e-10)
+    assert a.fingerprint != b.fingerprint
+    # identical measurements -> identical structure -> identical fingerprint
+    assert a.fingerprint == _fitted("fitted_fp", 2e-6, 1e-10).fingerprint
+
+
+# -- schedule memo cache ---------------------------------------------------------
+
+def test_lowering_memoized_per_fingerprint():
+    spec = get_machine("summit")
+    a = S.lower_strategy(spec, "three_step", 4096.0, 4)
+    assert S.lower_strategy(spec, "three_step", 4096.0, 4) is a
+    assert S.lower_strategy(spec, "three_step", 8192.0, 4) is not a
+    # capacity_overrides bypasses the cache entirely
+    c = S.lower_strategy(spec, "three_step", 4096.0, 4,
+                         capacity_overrides={"gpu_net": 1})
+    assert c is not a
+
+
+def test_candidate_schedules_returns_fresh_dict():
+    spec = get_machine("summit")
+    a = S.candidate_schedules(spec, 4096.0, 8)
+    b = S.candidate_schedules(spec, 4096.0, 8)
+    assert a is not b and a == b
+    a.clear()  # mutating a caller's copy must not poison the cache
+    assert S.candidate_schedules(spec, 4096.0, 8) == b
+
+
+def test_refit_spec_never_serves_stale_lowering():
+    slow = _fitted("fitted_coh", 1e-3, 1e-6)
+    fast = _fitted("fitted_coh", 1e-7, 1e-12)
+    t_slow = S.lower_strategy(slow, "cuda_aware", 65536.0, 4).steps[0].duration
+    t_fast = S.lower_strategy(fast, "cuda_aware", 65536.0, 4).steps[0].duration
+    assert t_fast < t_slow  # same name+args: a stale hit would return t_slow
+
+
+# -- plan cache ------------------------------------------------------------------
+
+def test_plan_cache_warm_hit_same_pick():
+    clear_plan_cache()
+    cold = select_schedule("summit", 4096.0, 8)
+    warm = select_schedule("summit", 4096.0, 8)
+    assert cold == warm
+    info = plan_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1
+
+
+def test_set_active_machine_clears_plan_cache():
+    select_transfer_path("summit", 65536.0, 4)
+    assert plan_cache_info()["entries"] >= 1
+    old = autotune.set_active_machine("summit")
+    try:
+        assert plan_cache_info()["entries"] == 0
+    finally:
+        autotune.set_active_machine(old)
+
+
+def test_reregistration_drops_plan_cache():
+    select_transfer_path("summit", 65536.0, 4)
+    gen = registry_generation()
+    register_machine("summit", get_machine("summit"))
+    assert registry_generation() == gen + 1
+    # next lookup sees the generation change: no hit is possible
+    select_transfer_path("summit", 65536.0, 4)
+    info = plan_cache_info()
+    assert info["hits"] == 0
+
+
+def test_refitted_active_machine_never_serves_stale_plan():
+    """The end-to-end staleness scenario: plans under a fitted machine,
+    refit flips which path wins, plans again — must see the new pick."""
+    # staged family so both gpudirect and three_step exist; direct net SLOW
+    sizes = np.logspace(1, 7, 24)
+    mk = lambda a_direct, b_direct: spec_from_measurements(  # noqa: E731
+        "fitted_live",
+        (sizes, a_direct + sizes * b_direct),
+        staged_net=(sizes, 2e-6 + sizes * 1e-10),
+        copy_d2h=(sizes, 1e-7 + sizes * 5e-12),
+        copy_h2d=(sizes, 1e-7 + sizes * 5e-12),
+        register=True,
+    )
+    mk(1e-2, 1e-5)  # direct path terrible
+    pick_slow = select_transfer_path("fitted_live", float(1 << 20), 1)
+    mk(1e-8, 1e-13)  # refit: direct path excellent
+    pick_fast = select_transfer_path("fitted_live", float(1 << 20), 1)
+    assert pick_slow != pick_fast
+    assert pick_fast == "gpudirect"
+
+
+def test_payload_bucketing_zero_drift_on_octave_sweep():
+    """Power-of-two sizes land in distinct buckets: cached and uncached
+    selection agree exactly across the sweep (the --compare gate's law)."""
+    clear_plan_cache()
+    sweep = [float(1 << p) for p in range(3, 27, 2)]
+    cached = [select_collective_strategy("summit", s, 8) for s in sweep]
+    clear_plan_cache()
+    S.clear_schedule_cache()
+    uncached = [select_collective_strategy("summit", s, 8) for s in sweep]
+    assert cached == uncached
+
+
+def test_bucket_width_bound():
+    """Two sizes share a bucket only if they differ by < 2**(1/8)."""
+    from repro.comms.autotune import _bucket
+
+    for p in range(3, 30):
+        s = float(1 << p)
+        assert _bucket(s) != _bucket(s * 2 ** (2 / 8))
+        assert _bucket(s) == _bucket(s * 2 ** (1 / 32))
