@@ -1,0 +1,149 @@
+"""Observability sections: model drift + metrics health (run.py sections).
+
+Two checks of the obs subsystem against live data, both exported into
+``BENCH_paper_models.json``:
+
+* ``model_drift`` — run the measurement pipeline (``bench_transfer`` on
+  in-process memcpy-like transfers, ``spec_from_measurements`` on the
+  samples) and reduce the resulting :mod:`repro.obs.drift` records to
+  per-tier relative-error summaries.  Gate: the fit must explain its own
+  samples (median tier within tolerance) — if the transport model cannot
+  reproduce the measurements it was fitted FROM, every downstream plan is
+  built on sand.  ``run.py --compare`` additionally gates that tiers do
+  not disappear and that an in-tolerance tier does not drop out of
+  tolerance (the ROADMAP item 5 calibration on-ramp).
+* ``metrics_health`` — with metrics enabled, one serve-style planning
+  burst must produce the counter families the dashboards key on
+  (plan-cache, lowering-memo, engine ops, selector latency), and the
+  plan-cache hit counter must agree exactly with the authoritative
+  ``plan_cache_info()`` numbers.  Catches silent de-instrumentation: a
+  refactor that drops a counter breaks this section, not a dashboard
+  three weeks later.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.comms.autotune import (
+    clear_plan_cache,
+    plan_cache_info,
+    select_schedule,
+)
+from repro.core.benchmark import bench_transfer, spec_from_measurements
+from repro.core.schedule import clear_schedule_cache
+from repro.obs import drift, metrics
+
+# the fit is judged against its own training samples, so the tolerance is
+# fit quality, not generalization: within 35% on at least 60% of samples
+# per tier (protocol-boundary samples legitimately straddle segments)
+DRIFT_TOL = 0.35
+DRIFT_WITHIN_FRAC_GATE = 0.60
+
+_SIZES = (1 << 10, 1 << 13, 1 << 16, 1 << 19, 1 << 22)
+
+
+def _memcpy_samples(scale: float = 1.0):
+    """In-container transport analogue: numpy buffer copies.
+
+    Real hardware would use bench_host_device_roundtrip; the copy path
+    exercises the identical bench_transfer -> fit -> drift pipeline.
+    """
+    return bench_transfer(
+        lambda s: np.zeros(int(s * scale) or 1, np.uint8),
+        lambda buf: buf.copy(),
+        sizes=_SIZES,
+    )
+
+
+def model_drift() -> bool:
+    print("# model drift: fitted tiers vs the measurements they came from")
+    drift.reset()
+    direct = _memcpy_samples(1.0)
+    staged = _memcpy_samples(2.0)   # a slower 'network': double the bytes
+    d2h = _memcpy_samples(0.5)
+    h2d = _memcpy_samples(0.5)
+    spec_from_measurements(
+        "bench_live_fit", direct,
+        staged_net=staged, copy_d2h=d2h, copy_h2d=h2d,
+        injectors_per_node=1, lanes_per_injector=1,
+        register=False,
+    )
+    summ = drift.summary(tol=DRIFT_TOL)
+    ok = bool(summ["tiers"])
+    for tier_key, s in summ["tiers"].items():
+        line_ok = s["within_tol"] >= DRIFT_WITHIN_FRAC_GATE
+        ok = ok and line_ok
+        print(f"model_drift,{tier_key},n={s['n']},"
+              f"mean_abs_rel_error={s['mean_abs_rel_error']:.3f},"
+              f"max_abs_rel_error={s['max_abs_rel_error']:.3f},"
+              f"within_{int(DRIFT_TOL * 100)}pct={s['within_tol']:.2f}"
+              + ("" if line_ok else ",FAIL"))
+    if not summ["tiers"]:
+        print("model_drift,FAIL,no drift records produced")
+    model_drift.last_values = summ
+    return ok
+
+
+# the metric families one serve-style planning burst must populate
+_EXPECTED_COUNTERS = ("plan_cache.hit", "plan_cache.miss",
+                      "lowering_memo.hit", "lowering_memo.miss",
+                      "engine.runs")
+_EXPECTED_HISTOGRAMS = ("plan.select_schedule.seconds",)
+
+
+def metrics_health() -> bool:
+    print("# metrics health: instrumentation coverage + counter exactness")
+    was_enabled = metrics.enabled()
+    # scratch registry: the exactness check needs counters that start at
+    # zero, but run.py's cumulative whole-run metrics must survive this
+    # section (they are exported into the report afterwards)
+    saved = metrics.swap_registry()
+    metrics.enable()
+    clear_plan_cache()
+    clear_schedule_cache()
+    try:
+        # a serve-style burst: repeated picks over a few sizes — cold
+        # misses then warm plan-cache hits
+        for _ in range(3):
+            for p in (10, 14, 18):
+                select_schedule("summit", float(1 << p), 8)
+        # exactness vs the authoritative cache counters, read BEFORE any
+        # further clear (clear_plan_cache zeroes them; metrics counters
+        # are cumulative by design)
+        info = plan_cache_info()
+        burst = metrics.to_json()["counters"]
+        mirrored_hits = burst.get("plan_cache.hit", 0.0)
+        mirrored_misses = burst.get("plan_cache.miss", 0.0)
+        exact = (mirrored_hits == info["hits"]
+                 and mirrored_misses == info["misses"])
+        # drop only the plan cache: the re-pick must re-lower, and THOSE
+        # lowerings come back from the warm lowering memo
+        clear_plan_cache()
+        select_schedule("summit", float(1 << 14), 8)
+        snap = metrics.to_json()
+        missing = [c for c in _EXPECTED_COUNTERS
+                   if c not in snap["counters"]]
+        missing += [h for h in _EXPECTED_HISTOGRAMS
+                    if h not in snap["histograms"]]
+        n_calls = snap["histograms"].get(
+            "plan.select_schedule.seconds", {}).get("count", 0)
+        print(f"metrics_health,counters={len(snap['counters'])},"
+              f"histograms={len(snap['histograms'])},"
+              f"plan_cache_hits={mirrored_hits:.0f}/{info['hits']},"
+              f"plan_cache_misses={mirrored_misses:.0f}/{info['misses']},"
+              f"select_calls={n_calls},missing={len(missing)}"
+              + ("" if not missing else "," + ";".join(missing)))
+        metrics_health.last_values = {
+            "counters": len(snap["counters"]),
+            "histograms": len(snap["histograms"]),
+            "missing": missing,
+            "counter_exactness": exact,
+        }
+        return not missing and exact
+    finally:
+        metrics.swap_registry(saved)
+        if not was_enabled:
+            metrics.disable()
+
+
+ALL = [model_drift, metrics_health]

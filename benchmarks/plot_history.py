@@ -72,27 +72,49 @@ def collect_panels(reports) -> List[Tuple[str, Dict[str, List[Optional[float]]]]
                        lambda r, p=p: r["overlap"][p]["speedup_vs_serial"])
             for p in pairs
         }))
+    # planner speedups get a panel each: warm-plan is O(100x) and engine
+    # O(2x), so sharing one linear axis flattened the engine series into
+    # an unreadable floor line
     if any("planner_speed" in r for _, r in reports):
-        panels.append(("planner speedups (log-worthy, plotted linear)", {
+        panels.append(("planner warm-plan speedup (cold/warm)", {
             "warm_plan": _series(
                 reports, lambda r: r["planner_speed"]["warm_speedup"]),
+        }))
+        panels.append(("planner engine speedup (reference/event)", {
             "engine": _series(
                 reports, lambda r: r["planner_speed"]["engine_speedup"]),
+        }))
+    if any("trace_overhead" in r for _, r in reports):
+        panels.append(("tracing overhead on the 64-rank ring (x)", {
+            "traced": _series(
+                reports, lambda r: r["trace_overhead"]["traced_slowdown"]),
+            "disabled": _series(
+                reports, lambda r: r["trace_overhead"]["disabled_overhead"]),
         }))
     return panels
 
 
-def _polyline(vals, lo, hi, y0) -> Tuple[str, List[Tuple[float, float, float]]]:
+_POINT_PAD = 6  # px between a min/max point and the panel frame
+
+
+def _polyline(
+    vals, lo, hi, rect_top
+) -> Tuple[str, List[Tuple[int, float, float, float]]]:
+    """Map a series into the panel rect spanning rect_top..rect_top +
+    (PANEL_H - 18), keeping every point inside the frame (the old formula
+    placed minimum-value points 9px below it).  Points carry their report
+    index so callers can label them with the git short-sha."""
     n = len(vals)
     span = max(hi - lo, 1e-12)
+    inner = PANEL_H - 18 - 2 * _POINT_PAD
     pts = []
     for i, v in enumerate(vals):
         if v is None:
             continue
         x = MARGIN + (PANEL_W - 2 * MARGIN) * (i / max(n - 1, 1))
-        y = y0 + PANEL_H - (PANEL_H - 18) * ((v - lo) / span) - 9
-        pts.append((x, y, v))
-    return " ".join(f"{x:.1f},{y:.1f}" for x, y, _ in pts), pts
+        y = rect_top + _POINT_PAD + inner * (1.0 - (v - lo) / span)
+        pts.append((i, x, y, v))
+    return " ".join(f"{x:.1f},{y:.1f}" for _, x, y, _ in pts), pts
 
 
 def render_svg(reports) -> str:
@@ -130,9 +152,13 @@ def render_svg(reports) -> str:
             if line:
                 out.append(f'<polyline points="{line}" fill="none" '
                            f'stroke="{color}" stroke-width="1.5"/>')
-                for x, y, _ in pts:
-                    out.append(f'<circle cx="{x:.1f}" cy="{y:.1f}" r="2.5" '
-                               f'fill="{color}"/>')
+                for i, x, y, v in pts:
+                    # <title> = hover annotation: which PR produced the point
+                    out.append(
+                        f'<circle cx="{x:.1f}" cy="{y:.1f}" r="2.5" '
+                        f'fill="{color}"><title>{shas[i][:7]}: '
+                        f'{label}={v:.4g}</title></circle>'
+                    )
             out.append(
                 f'<text x="{PANEL_W - MARGIN + 4}" '
                 f'y="{y0 + 30 + 13 * ci}" fill="{color}">{label[:20]}</text>'

@@ -92,6 +92,16 @@ def print_history(history_dir: str) -> int:
             lambda r: round(r["planner_speed"]["engine_speedup"], 2))))
         print("  planner   pick_parity              " + fmt(series(
             lambda r: r["planner_speed"]["pick_parity"])))
+    if any("trace_overhead" in r for _, r in reports):
+        print("  tracing   traced_slowdown          " + fmt(series(
+            lambda r: round(r["trace_overhead"]["traced_slowdown"], 2))))
+        print("  tracing   disabled_overhead        " + fmt(series(
+            lambda r: round(r["trace_overhead"]["disabled_overhead"], 3))))
+    tiers = sorted({k for _, r in reports
+                    for k in r.get("drift", {}).get("tiers", {})})
+    for tier in tiers:
+        print(f"  drift     {tier:<28} within_tol: " + fmt(series(
+            lambda r, t=tier: round(r["drift"]["tiers"][t]["within_tol"], 2))))
     fails = series(
         lambda r: sorted(k for k, v in r.get("sections", {}).items() if not v)
     )
@@ -162,6 +172,33 @@ def compare_reports(new: dict, ref: dict) -> list:
             for key in ("warm_speedup", "engine_speedup"):
                 if key in ref_ps and key not in new_ps:
                     drift.append(f"planner_speed {key!r} disappeared")
+    # observability: a drift tier must not disappear, and a tier that was
+    # within tolerance must not fall out of it (the model silently
+    # diverging from measurement is exactly what this section exists to
+    # catch).  The metrics snapshot and trace_overhead measurements are
+    # presence-gated only — their values are host noise.
+    ref_tiers = ref.get("drift", {}).get("tiers", {})
+    new_tiers = new.get("drift", {}).get("tiers", {})
+    if ref_tiers:
+        if not new_tiers:
+            drift.append("drift section disappeared")
+        else:
+            gate = 0.60  # same within_tol floor observability.model_drift gates
+            for tier, rec in ref_tiers.items():
+                now = new_tiers.get(tier)
+                if now is None:
+                    drift.append(f"drift tier {tier!r} disappeared")
+                elif (rec.get("within_tol", 0.0) >= gate
+                      and now.get("within_tol", 0.0) < gate):
+                    drift.append(
+                        f"drift tier {tier!r} fell out of tolerance: "
+                        f"within_tol {rec['within_tol']:.2f} -> "
+                        f"{now['within_tol']:.2f}"
+                    )
+    if ref.get("metrics") and not new.get("metrics", {}).get("counters"):
+        drift.append("metrics snapshot disappeared (or empty counters)")
+    if ref.get("trace_overhead") and not new.get("trace_overhead"):
+        drift.append("trace_overhead section disappeared")
     return drift
 
 
@@ -196,12 +233,24 @@ def main(argv=None) -> None:
             print(f"# cannot load compare reference {args.compare}: {e}")
             raise SystemExit(2)
 
-    from benchmarks import paper_models, planner_speed, schedules, tpu_planner
+    from benchmarks import (
+        observability,
+        paper_models,
+        planner_speed,
+        schedules,
+        tpu_planner,
+    )
+    from repro.obs import metrics as obs_metrics
+
+    # metrics on for the whole run: the sections themselves are the
+    # workload, and their counter snapshot lands in the report below
+    obs_metrics.reset()
+    obs_metrics.enable()
 
     results = {}
     t0 = time.time()
     for fn in (paper_models.ALL + tpu_planner.ALL + schedules.ALL
-               + planner_speed.ALL):
+               + planner_speed.ALL + observability.ALL):
         name = fn.__name__
         try:
             results[name] = bool(fn())
@@ -240,6 +289,12 @@ def main(argv=None) -> None:
         "schedule_parity": getattr(schedules.schedule_parity, "last_values", {}),
         "overlap": getattr(schedules.schedule_overlap, "last_values", {}),
         "planner_speed": getattr(planner_speed.planner_speed, "last_values", {}),
+        "trace_overhead": getattr(
+            planner_speed.tracing_overhead, "last_values", {}),
+        "drift": getattr(observability.model_drift, "last_values", {}),
+        "metrics_health": getattr(
+            observability.metrics_health, "last_values", {}),
+        "metrics": obs_metrics.to_json(),
         "ok": all(results.values()),
     }
     try:

@@ -38,6 +38,9 @@ from repro.core.planner import (
     plan_tpu_crosspod,
 )
 from repro.core.topology import TpuPodTopology
+from repro.obs import drift as obs_drift
+from repro.obs import metrics as obs_metrics
+from repro.obs import observed
 
 # Registry name of the machine this deployment runs on; selectors use it
 # when no machine is given.  Point it at a fitted spec to let live
@@ -132,8 +135,10 @@ def _plan_cached(key: tuple, compute: Callable[[], str]) -> str:
     if hit is not None:
         _PLAN_CACHE_HITS += 1
         _PLAN_CACHE.move_to_end(key)
+        obs_metrics.inc("plan_cache.hit")
         return hit
     _PLAN_CACHE_MISSES += 1
+    obs_metrics.inc("plan_cache.miss")
     val = compute()
     _PLAN_CACHE[key] = val
     if len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
@@ -149,6 +154,7 @@ def _resolve(machine: Union[str, MachineSpec, None]) -> MachineSpec:
     return resolve_spec(machine, default=_ACTIVE_MACHINE)
 
 
+@observed("plan.select_transfer_path", pick=str)
 def select_transfer_path(
     machine: Union[str, MachineSpec, None],
     nbytes_per_msg: float,
@@ -169,6 +175,7 @@ def select_transfer_path(
     return _plan_cached(key, compute)
 
 
+@observed("plan.select_collective_strategy", pick=str)
 def select_collective_strategy(
     machine: Union[str, MachineSpec, None],
     nbytes_per_msg: float,
@@ -190,6 +197,7 @@ def select_collective_strategy(
     return _plan_cached(key, compute)
 
 
+@observed("plan.select_schedule", pick=str)
 def select_schedule(
     machine: Union[str, MachineSpec, None],
     nbytes_per_msg: float,
@@ -217,6 +225,7 @@ def select_schedule(
     return _plan_cached(key, compute)
 
 
+@observed("simulate.explain_bottleneck")
 def explain_bottleneck(
     machine: Union[str, MachineSpec, None],
     nbytes_per_msg: float,
@@ -332,6 +341,7 @@ def _schedule_pick(
     return mapping.get(pick)
 
 
+@observed("plan.select_allreduce_strategy", pick=str)
 def select_allreduce_strategy(
     mesh_shape: Dict[str, int], bytes_per_chip: float, machine: Optional[str] = None
 ) -> str:
@@ -359,6 +369,7 @@ def select_allreduce_strategy(
     return _plan_cached(key, compute)
 
 
+@observed("plan.select_alltoall_strategy", pick=str)
 def select_alltoall_strategy(
     mesh_shape: Dict[str, int],
     bytes_per_chip: float,
@@ -391,6 +402,7 @@ def select_alltoall_strategy(
     return _plan_cached(key, compute)
 
 
+@observed("plan.select_moe_dispatch_strategy", pick=str)
 def select_moe_dispatch_strategy(
     mesh_shape: Dict[str, int],
     ep_axes,
@@ -433,6 +445,11 @@ def measured_autotune(
     model_pick: str,
     reps: int = 5,
     warmup: int = 1,
+    *,
+    predicted: Optional[Dict[str, float]] = None,
+    machine: str = "",
+    nbytes: float = 0.0,
+    tier: str = "autotune",
 ) -> AutotuneRecord:
     """Run each candidate, take min-of-reps, pick the fastest; record whether
     the model agreed (the paper's model-validation loop, §VI).
@@ -441,6 +458,12 @@ def measured_autotune(
     costs (JIT compilation, cache population) so ``reps`` measures the
     steady state.  Min-of-reps (not mean) is the right statistic for a
     deterministic operation timed on a noisy host: noise only ever adds.
+
+    When the caller also has model *predictions* for the candidates, pass
+    ``predicted={name: seconds}`` (plus ``machine``/``nbytes``/``tier``
+    context): every (predicted, measured) pair lands in
+    :mod:`repro.obs.drift`, which is how model drift becomes visible to
+    ``benchmarks/run.py --compare`` without any extra timing work.
 
     Example — timing planner warm-path throughput (benchmarks/planner_speed
     routes its model-vs-measured timing through this single code path)::
@@ -462,6 +485,16 @@ def measured_autotune(
             best = min(best, _CLOCK() - t0)
         measured[name] = best
     pick = min(measured, key=measured.get)
+    agreed = pick == model_pick
+    if predicted:
+        mname = machine or _ACTIVE_MACHINE
+        for name, pred in predicted.items():
+            if name in measured:
+                obs_drift.record(
+                    mname, tier, name, nbytes, pred, measured[name]
+                )
+    obs_metrics.inc("autotune.runs")
+    obs_metrics.inc("autotune.agreed" if agreed else "autotune.disagreed")
     return AutotuneRecord(
-        strategy=pick, measured=measured, model_pick=model_pick, agreed=pick == model_pick
+        strategy=pick, measured=measured, model_pick=model_pick, agreed=agreed
     )

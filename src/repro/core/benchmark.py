@@ -28,6 +28,7 @@ from repro.core.machine import (
     register_machine,
 )
 from repro.core.params import PostalParams
+from repro.obs import drift as obs_drift
 
 
 def _time_call(fn: Callable[[], None], min_time: float = 2e-3, max_reps: int = 200) -> float:
@@ -201,6 +202,22 @@ def spec_from_measurements(
                 model=fit_transport_model(*_samples(data), thresholds=None),
                 width=lanes_per_injector,
                 serialize_alpha=True,
+            )
+    # fitted-vs-measured residuals per tier: every sample the fit consumed
+    # becomes a drift record, so the fit quality itself is visible to
+    # run.py --compare (a tier whose model stops matching its own samples
+    # is the first sign of a bad protocol-threshold split)
+    tier_samples = {"gpu_net": direct_net}
+    if staged_family:
+        tier_samples.update(
+            cpu_net=staged_net, copy_d2h=copy_d2h, copy_h2d=copy_h2d
+        )
+    for tier_name, data in tier_samples.items():
+        tier = tiers[tier_name]
+        for s, t in zip(*_samples(data)):
+            obs_drift.record(
+                name, tier_name, f"fit:{tier_name}", float(s),
+                float(tier.time(float(s))), float(t),
             )
     paths = gpu_family_paths()
     strategies = gpu_family_strategies()

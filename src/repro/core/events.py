@@ -207,7 +207,38 @@ class SimResult:
         )
 
 
+# Observability seam (see repro/obs/__init__.py).  This module never
+# imports repro.obs; when metrics or tracing are on, obs installs a sink
+# here and run_schedule feeds it every result.  The quiet-path cost is one
+# `is not None` check per run — measured (not asserted) in
+# benchmarks/planner_speed.py's tracing_overhead section.
+_OBS_SINK = None
+# engine op counts from the most recent _run_schedule_impl call; module
+# state (not SimResult fields) so the parity-pinned result shape is
+# untouched
+_LAST_STATS: Dict[str, int] = {}
+
+
+def set_obs_sink(fn) -> None:
+    """Install (or clear, with None) the run_schedule result sink."""
+    global _OBS_SINK
+    _OBS_SINK = fn
+
+
 def run_schedule(schedule: Schedule) -> SimResult:
+    """Execute the DAG; feed the result to the obs sink when one is set.
+
+    Semantics live in :func:`_run_schedule_impl`; this wrapper exists so
+    the instrumented path and the bare engine can be timed against each
+    other.
+    """
+    result = _run_schedule_impl(schedule)
+    if _OBS_SINK is not None:
+        _OBS_SINK(result, _LAST_STATS)
+    return result
+
+
+def _run_schedule_impl(schedule: Schedule) -> SimResult:
     """Execute the DAG with greedy earliest-start list scheduling.
 
     Event-driven implementation: semantically identical to
@@ -268,6 +299,7 @@ def run_schedule(schedule: Schedule) -> SimResult:
     best_key: List[Optional[float]] = [None] * V
     committed = [False] * V
     heappush, heappop = heapq.heappush, heapq.heappop
+    n_push = n_pop = n_stale = 0  # op counts -> _LAST_STATS
 
     def earliest(i: int) -> Tuple[float, Optional[str], Optional[int]]:
         """(feasible start, blocking holder, blocked resource index) — the
@@ -283,6 +315,7 @@ def run_schedule(schedule: Schedule) -> SimResult:
         return start, rblocker, ri_blk
 
     def enqueue(i: int, start: Optional[float] = None) -> None:
+        nonlocal n_push
         if start is None:
             start = ready_time[i]
             for ri in step_res[i]:
@@ -293,6 +326,7 @@ def run_schedule(schedule: Schedule) -> SimResult:
         if bk is not None and bk <= start:
             return  # a queued candidate at bk <= start already covers this
         best_key[i] = start
+        n_push += 1
         heappush(pq, (start, i))
 
     for i, st in enumerate(step_list):
@@ -304,6 +338,7 @@ def run_schedule(schedule: Schedule) -> SimResult:
 
     while pq:
         key_start, i = heappop(pq)
+        n_pop += 1
         if committed[i]:
             continue  # duplicate candidate of a committed step
         if best_key[i] == key_start:
@@ -312,6 +347,7 @@ def run_schedule(schedule: Schedule) -> SimResult:
         if start != key_start:
             # stale key (keys are copied floats, never arithmetic, so exact
             # equality is the right staleness test); reinsert and retry
+            n_stale += 1
             enqueue(i, start)
             continue
         st = step_list[i]
@@ -363,6 +399,13 @@ def run_schedule(schedule: Schedule) -> SimResult:
             f"schedule {schedule.name!r} has a dependency cycle; "
             f"unrunnable steps: {unrun[:8]}"
         )
+    global _LAST_STATS
+    _LAST_STATS = {
+        "steps_run": V,
+        "pq_pushes": n_push,
+        "pq_pops": n_pop,
+        "stale_retries": n_stale,
+    }
     makespan = max((t.end for t in traces.values()), default=0.0)
     return SimResult(schedule=schedule, makespan=makespan, traces=traces)
 
@@ -478,6 +521,20 @@ class ResourceUsage:
     cap_beta_time: float  # part of beta_time priced at the beta_N cap
 
 
+def _attribution_key(u: "ResourceUsage"):
+    """Deterministic severity order for bottleneck attribution.
+
+    Primary: critical-path occupancy, then total busy time.  Exact ties
+    happen whenever the same steps occupy several resources (a lane plus
+    its core pool); they resolve toward the nearest-saturation resource —
+    higher utilization (busy per slot), then more queue wait — and name
+    is the final total-order tie-break, so the report is invariant under
+    resource declaration / ``capacity_overrides`` permutations (pinned by
+    tests/test_obs.py).
+    """
+    return (-u.critical, -u.busy, -u.utilization, -u.queue_wait, u.name)
+
+
 @dataclasses.dataclass(frozen=True)
 class BottleneckReport:
     """Which resource bounds the schedule, and through which term.
@@ -501,9 +558,9 @@ class BottleneckReport:
             f"schedule {self.schedule!r}: makespan {self.makespan:.3e}s — "
             f"bottleneck {self.bottleneck!r} ({self.binding}-bound)"
         ]
-        for u in sorted(
-            self.resources.values(), key=lambda u: u.critical, reverse=True
-        ):
+        # same key as the bottleneck pick: ties cannot reorder under
+        # resource declaration / capacity_overrides permutations
+        for u in sorted(self.resources.values(), key=_attribution_key):
             lines.append(
                 f"  {u.name:<28} busy={u.busy:.3e}s util={u.utilization:5.1%} "
                 f"critical={u.critical:.3e}s queue_wait={u.queue_wait:.3e}s"
@@ -560,7 +617,12 @@ def bottleneck_report(result: SimResult) -> BottleneckReport:
             bottleneck="(none)", binding="latency", resources={},
             critical_steps=tuple(t.step.name for t in chain),
         )
-    top = max(usages.values(), key=lambda u: (u.critical, u.busy))
+    # most-critical resource; critical/busy ties (common when the same
+    # steps occupy two resources) go to the nearest-saturation one —
+    # higher utilization, then more queue wait — and finally to name, so
+    # dict insertion order (which follows resource declaration /
+    # capacity_overrides ordering) cannot flip the answer
+    top = min(usages.values(), key=_attribution_key)
     if top.alpha_time >= top.beta_time:
         binding = "latency"
     elif top.cap_beta_time > top.beta_time / 2:

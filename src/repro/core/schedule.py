@@ -61,6 +61,8 @@ from repro.core.machine import (
     resolve_spec,
 )
 from repro.core.params import Locality
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 _COPY_KINDS = ("copy_d2h", "copy_h2d")
 
@@ -106,8 +108,10 @@ def _memo_get(key: tuple):
     if hit is not None:
         _SCHEDULE_CACHE_HITS += 1
         _SCHEDULE_CACHE.move_to_end(key)
+        obs_metrics.inc("lowering_memo.hit")
     else:
         _SCHEDULE_CACHE_MISSES += 1
+        obs_metrics.inc("lowering_memo.miss")
     return hit
 
 
@@ -336,13 +340,16 @@ def lower_strategy(
         hit = _memo_get(key)
         if hit is not None:
             return hit
-    sched = lower_path(
-        spec, decl.path, nbytes_per_msg, n_msgs,
-        lanes=int(spec.value(decl.lanes, default=1)), concurrency=conc,
-        locality=locality, socket=socket, dedup_factor=dedup_factor,
-        split_messages=split_messages, capacity_overrides=capacity_overrides,
-        name=f"{spec.name}:{strategy}",
-    )
+    # span only around real lowering work — memo hits above stay span-free
+    with obs_trace.span("lower", strategy=strategy, machine=spec.name):
+        sched = lower_path(
+            spec, decl.path, nbytes_per_msg, n_msgs,
+            lanes=int(spec.value(decl.lanes, default=1)), concurrency=conc,
+            locality=locality, socket=socket, dedup_factor=dedup_factor,
+            split_messages=split_messages,
+            capacity_overrides=capacity_overrides,
+            name=f"{spec.name}:{strategy}",
+        )
     if key is not None:
         _memo_put(key, sched)
     return sched

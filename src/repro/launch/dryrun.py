@@ -33,6 +33,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.obs import trace as obs_trace
 
 
 # --------------------------------------------------------------------------
@@ -228,13 +229,16 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: dict, outdir: 
     }
     t0 = time.time()
     try:
-        jf, args, meta = build_cell(arch, shape_name, mesh_kind, variant)
+        with obs_trace.span("dryrun.build", cell=cell_id):
+            jf, args, meta = build_cell(arch, shape_name, mesh_kind, variant)
         rec.update(meta)
         if jf is None:
             rec["ok"] = "skipped"
         else:
-            lowered = jf.lower(*args)
-            compiled = lowered.compile()
+            with obs_trace.span("dryrun.lower", cell=cell_id):
+                lowered = jf.lower(*args)
+            with obs_trace.span("dryrun.compile", cell=cell_id):
+                compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t0, 1)
             ma = compiled.memory_analysis()
             rec["memory"] = {
@@ -303,7 +307,14 @@ def main():
     ap.add_argument("--serve-layout", action="store_true")
     ap.add_argument("--wkv-chunk", type=int, default=0)
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument(
+        "--trace", default="", metavar="PATH",
+        help="write a Chrome trace_event JSON of the sweep (build/lower/"
+             "compile spans per cell; open in Perfetto)",
+    )
     args = ap.parse_args()
+
+    tracer = obs_trace.start(name="dryrun") if args.trace else None
 
     from repro.configs import ARCHS, SHAPES
 
@@ -348,6 +359,11 @@ def main():
                 import jax
 
                 jax.clear_caches()  # keep long sweeps from accumulating
+    if tracer is not None:
+        obs_trace.stop()
+        tracer.write(args.trace)
+        print(f"[dryrun] trace written to {args.trace} "
+              f"({len(tracer.events)} events)")
     print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
     if n_fail:
         raise SystemExit(1)

@@ -3,6 +3,13 @@
 Demonstrates the inference path the decode_* dry-run shapes lower: one
 prefill building per-layer caches, then a jitted single-token decode step
 iterated with the KV/recurrent caches donated in place.
+
+Observability (DESIGN.md §8): the run enables :mod:`repro.obs.metrics`
+and, with ``--trace``, a :mod:`repro.obs.trace` tracer — so one serve run
+emits one Perfetto-loadable timeline (prefill / per-token decode / plan
+spans on the wall clock, plus the simulated per-resource timeline of the
+collective the planner picked) and a one-line metrics digest at exit in
+place of the old ad-hoc cache print.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ from repro.launch.train import build_mesh
 from repro.models import decode as dec
 from repro.models import init_params
 from repro.models.transformer import DistContext
+from repro.obs import metrics, trace
 from repro.sharding import specs
 
 
@@ -32,7 +40,18 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--mesh-shape", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--trace", default="", metavar="PATH",
+        help="write a Chrome trace_event JSON of this run (open in Perfetto)",
+    )
+    ap.add_argument(
+        "--metrics-out", default="", metavar="PATH",
+        help="write the end-of-run metrics snapshot as JSON",
+    )
     args = ap.parse_args(argv)
+
+    metrics.enable()
+    tracer = trace.start(name="serve") if args.trace else None
 
     mesh = build_mesh(args.mesh_shape)
     tp = mesh.shape.get("model", 1)
@@ -58,13 +77,15 @@ def main(argv=None):
         )
 
     t0 = time.perf_counter()
-    prefill_fn = jax.jit(
-        functools.partial(dec.prefill, cfg, capacity=capacity, dist=dist),
-        static_argnames=(),
-    )
-    logits, caches = prefill_fn(params, jnp.asarray(prompts), frontend=frontend)
-    logits.block_until_ready()
+    with trace.span("prefill", batch=B, prompt_len=P_len):
+        prefill_fn = jax.jit(
+            functools.partial(dec.prefill, cfg, capacity=capacity, dist=dist),
+            static_argnames=(),
+        )
+        logits, caches = prefill_fn(params, jnp.asarray(prompts), frontend=frontend)
+        logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
+    metrics.observe("serve.prefill.seconds", t_prefill)
     print(f"[serve] prefill {B}x{P_len} in {t_prefill:.2f}s "
           f"({B * P_len / t_prefill:.0f} tok/s)")
 
@@ -76,8 +97,10 @@ def main(argv=None):
     # decode step (payload per chip grows with the live KV length, so the
     # pick can legitimately flip mid-generation).  The autotune plan cache
     # makes the repeat consultations microsecond probes — planner_speed in
-    # benchmarks/ gates that this stays serving-loop affordable.
-    from repro.comms.autotune import plan_cache_info, select_allreduce_strategy
+    # benchmarks/ gates that this stays serving-loop affordable, and the
+    # plan_cache.hit/miss counters (see the exit summary) replace the old
+    # inline hit/miss print.
+    from repro.comms.autotune import select_allreduce_strategy
 
     plan_shape = dict(mesh.shape)
     token_bytes = float(B * cfg.d_model) * 2  # bf16 activations per token
@@ -85,23 +108,49 @@ def main(argv=None):
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     t0 = time.perf_counter()
     for i in range(N):
-        out_tokens.append(np.asarray(tok)[:, 0])
-        collective = select_allreduce_strategy(
-            plan_shape, token_bytes * (P_len + i + 1)
-        )
-        logits, caches = decode_fn(params, caches, tok, jnp.int32(P_len + i))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        with trace.span("decode.step", token=i):
+            out_tokens.append(np.asarray(tok)[:, 0])
+            with trace.span("plan"):
+                collective = select_allreduce_strategy(
+                    plan_shape, token_bytes * (P_len + i + 1)
+                )
+            logits, caches = decode_fn(params, caches, tok, jnp.int32(P_len + i))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        metrics.inc("serve.decode.tokens", B)
     jax.block_until_ready(logits)
     t_dec = time.perf_counter() - t0
-    info = plan_cache_info()
-    print(f"[serve] per-step plan: {collective} "
-          f"(plan cache {info['hits']} hits / {info['misses']} misses)")
+    metrics.observe("serve.decode.seconds", t_dec)
+    print(f"[serve] per-step plan: {collective}")
+
+    # Simulate the final pick through the event engine so the trace carries
+    # the per-resource timeline + bottleneck attribution of what the plan
+    # means in simulated time, not just the wall-clock spans around it.
+    # (On a single-device mesh the selectors short-circuit without any
+    # engine run, so this is also what guarantees resource tracks exist.)
+    with trace.span("simulate"):
+        from repro.comms.autotune import explain_bottleneck
+
+        report = explain_bottleneck(None, token_bytes * (P_len + N), n_msgs=1)
+    metrics.gauge("serve.simulated_makespan_s", report.makespan)
+
     gen = np.stack(out_tokens, axis=1)
     print(f"[serve] decoded {N} tokens x {B} seqs in {t_dec:.2f}s "
           f"({B * N / t_dec:.1f} tok/s)")
     print("[serve] sample generations (first 3 rows):")
     for row in gen[:3]:
         print("   ", row[:16].tolist())
+
+    if tracer is not None:
+        trace.stop()
+        tracer.write(args.trace)
+        print(f"[serve] trace written to {args.trace} "
+              f"({len(tracer.events)} events)")
+    if args.metrics_out:
+        metrics.write(args.metrics_out)
+        print(f"[serve] metrics written to {args.metrics_out}")
+    print("[serve] metrics:",
+          metrics.summary_line(prefixes=["serve.", "plan_cache.",
+                                         "lowering_memo.", "engine."]))
     return gen
 
 

@@ -1,0 +1,121 @@
+"""Model-drift ledger: predicted vs measured transport times, per tier.
+
+The registry's whole value is that ``tier.time(nbytes)`` predicts what a
+wire transfer actually costs — and the paper's premise is that the real
+cost "varies greatly with machine architecture, job partition, and nearby
+jobs".  This module is the check: every code path that *has* both numbers
+(``benchmark.spec_from_measurements`` fitting a tier against its own
+samples, ``measured_autotune`` timing a candidate the model also priced)
+drops a :class:`DriftRecord` here, and :func:`summary` reduces them to
+per-transport-tier relative-error statistics that ``benchmarks/run.py``
+exports and ``--compare`` gates.  When the model silently diverges from
+measurement, CI sees it — the on-ramp to ROADMAP item 5's live
+calibration.
+
+Recording is unconditional (no enable flag): the feeding paths already
+paid for a real measurement, so one dataclass append is noise.  The
+buffer is bounded so a long-running serve process cannot grow it without
+limit.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional
+
+_MAX_RECORDS = 4096
+
+
+@dataclass(frozen=True)
+class DriftRecord:
+    """One (model prediction, live measurement) pair.
+
+    ``tier`` is the transport-tier name (``gpu_net``, ``copy_d2h``, ...);
+    ``collective`` is the operation context (``fit:gpu_net`` for fitter
+    samples, the candidate label for autotune runs).  Times in seconds.
+    """
+
+    machine: str
+    tier: str
+    collective: str
+    nbytes: float
+    predicted: float
+    measured: float
+
+    @property
+    def rel_error(self) -> float:
+        """(predicted - measured) / measured; inf when measured == 0."""
+        if self.measured == 0.0:
+            return math.inf if self.predicted != 0.0 else 0.0
+        return (self.predicted - self.measured) / self.measured
+
+
+_RECORDS: Deque[DriftRecord] = deque(maxlen=_MAX_RECORDS)
+
+
+def record(
+    machine: str,
+    tier: str,
+    collective: str,
+    nbytes: float,
+    predicted: float,
+    measured: float,
+) -> DriftRecord:
+    r = DriftRecord(
+        machine=str(machine),
+        tier=str(tier),
+        collective=str(collective),
+        nbytes=float(nbytes),
+        predicted=float(predicted),
+        measured=float(measured),
+    )
+    _RECORDS.append(r)
+    return r
+
+
+def records() -> List[DriftRecord]:
+    return list(_RECORDS)
+
+
+def reset() -> None:
+    _RECORDS.clear()
+
+
+def summary(tol: float = 0.25) -> dict:
+    """Per-tier relative-error reduction over every recorded pair.
+
+    ``tol`` is the |rel_error| threshold for the ``within_tol`` fraction —
+    the share of predictions within 25% (default) of measurement.  Keys
+    are ``machine/tier`` so a report mixing fitted machines stays legible;
+    everything is plain JSON for ``BENCH_paper_models.json``.
+    """
+    by_tier: Dict[str, List[DriftRecord]] = {}
+    for r in _RECORDS:
+        by_tier.setdefault(f"{r.machine}/{r.tier}", []).append(r)
+    tiers = {}
+    for key in sorted(by_tier):
+        rs = by_tier[key]
+        errs = [r.rel_error for r in rs]
+        finite = [e for e in errs if math.isfinite(e)]
+        n = len(rs)
+        tiers[key] = {
+            "n": n,
+            "mean_rel_error": (sum(finite) / len(finite)) if finite else 0.0,
+            "mean_abs_rel_error": (
+                sum(abs(e) for e in finite) / len(finite) if finite else 0.0
+            ),
+            "max_abs_rel_error": max((abs(e) for e in finite), default=0.0),
+            "within_tol": sum(1 for e in errs if abs(e) <= tol) / n,
+            "bytes_range": [min(r.nbytes for r in rs), max(r.nbytes for r in rs)],
+        }
+    return {"tol": tol, "n_records": len(_RECORDS), "tiers": tiers}
+
+
+def worst(n: int = 5) -> List[DriftRecord]:
+    """The ``n`` records with the largest |relative error| (debug aid)."""
+    return sorted(
+        _RECORDS,
+        key=lambda r: abs(r.rel_error) if math.isfinite(r.rel_error) else math.inf,
+        reverse=True,
+    )[:n]

@@ -20,9 +20,12 @@ def _fresh_planner_caches():
     """
     from repro.comms.autotune import clear_plan_cache
     from repro.core.schedule import clear_schedule_cache
+    from repro.obs import reset_all as reset_obs
 
     clear_plan_cache()
     clear_schedule_cache()
+    reset_obs()
     yield
     clear_plan_cache()
     clear_schedule_cache()
+    reset_obs()

@@ -1,0 +1,329 @@
+"""Observability subsystem: trace export, metrics, drift, determinism.
+
+The load-bearing pins:
+
+* Chrome-trace round-trip of a *composed* TPU schedule (hierarchical
+  all-reduce on a 2-pod torus — multi-resource, multi-phase, queueing):
+  valid trace_event schema, per-lane thread tracks, ts/dur sanity, and —
+  the real contract — every engine blocker edge appears as exactly one
+  ``s``/``f`` flow pair whose endpoints are the blocker's end and the
+  blocked step's start.
+* ``bottleneck_report`` attribution is invariant under resource
+  declaration order and ``capacity_overrides`` permutations (the ISSUE 7
+  bugfix: ties used to resolve by dict insertion order).
+* Metrics disabled mode collects nothing; enabled mode mirrors the
+  authoritative cache counters exactly; the engine sink installs and
+  uninstalls with obs state.
+* Drift records reduce to correct per-tier relative-error summaries and
+  are fed by both ``spec_from_measurements`` and ``measured_autotune``.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core.events import (
+    Resource,
+    Schedule,
+    Step,
+    bottleneck_report,
+    run_schedule,
+)
+from repro.core.schedule import hierarchical_allreduce_schedule
+from repro.core.topology import TpuPodTopology
+from repro.obs import drift, metrics, observed, trace
+
+
+def _tpu_composed_result():
+    topo = TpuPodTopology(pods=2, torus_x=4, torus_y=4)
+    sched = hierarchical_allreduce_schedule(topo, float(1 << 20))
+    return run_schedule(sched)
+
+
+# --------------------------------------------------------------------------
+# Trace export.
+# --------------------------------------------------------------------------
+
+def test_to_chrome_json_roundtrip_composed_tpu_schedule():
+    result = _tpu_composed_result()
+    doc = json.loads(json.dumps(trace.to_chrome_json(result)))
+
+    evs = doc["traceEvents"]
+    assert evs
+    # schema: every event has the required trace_event fields
+    for e in evs:
+        assert e["ph"] in ("X", "M", "b", "e", "s", "f")
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] != "M":
+            assert e["ts"] >= 0.0
+
+    # one X duration event per step, all on the same pid
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == len(result.traces)
+    assert len({e["pid"] for e in xs}) == 1
+
+    # per-resource-lane tracks: thread_name metadata for every tid in use
+    named_tids = {e["tid"] for e in evs
+                  if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {e["tid"] for e in xs} <= named_tids
+    assert len(named_tids) > 1  # composed schedule spans many resources
+
+    # X events per tid are non-overlapping and start-sorted in file order
+    # (one lane = one execution slot)
+    by_tid = {}
+    for e in xs:
+        by_tid.setdefault(e["tid"], []).append(e)
+    for tid_events in by_tid.values():
+        end = -1.0
+        for e in tid_events:
+            assert e["ts"] >= end - 1e-6, "lane double-booked"
+            end = e["ts"] + e["dur"]
+
+    # critical-path metadata matches the engine's chain
+    meta = next(iter(doc["metadata"]["schedules"].values()))
+    chain = [t.step.name for t in result.critical_path()]
+    assert meta["critical_path"] == chain
+    assert meta["makespan"] == pytest.approx(result.makespan)
+    assert meta["n_steps"] == len(result.traces)
+    assert meta["bottleneck"]["bottleneck"] in result.schedule.resources
+
+
+def test_flow_events_match_engine_blocker_chains():
+    result = _tpu_composed_result()
+    doc = trace.to_chrome_json(result)
+    US = 1e6
+    starts = {}
+    finishes = {}
+    for e in doc["traceEvents"]:
+        if e["ph"] == "s":
+            starts[e["id"]] = e
+        elif e["ph"] == "f":
+            finishes[e["id"]] = e
+    assert set(starts) == set(finishes)
+
+    blocked = [t for t in result.traces.values() if t.blocker is not None]
+    assert blocked, "composed schedule must exercise blocking"
+    # exactly one flow pair per blocker edge, anchored at (blocker end,
+    # blocked start) — the same edges critical_path() walks
+    assert len(starts) == len(blocked)
+    anchors = sorted(
+        (s["ts"], finishes[i]["ts"]) for i, s in starts.items()
+    )
+    expected = sorted(
+        (result.traces[t.blocker].end * US, t.start * US) for t in blocked
+    )
+    for (s_ts, f_ts), (blk_end, start) in zip(anchors, expected):
+        assert s_ts == pytest.approx(blk_end)
+        assert f_ts == pytest.approx(start)
+    # queue-blocked edges are tagged with the resource they queued on
+    cats = {c for e in doc["traceEvents"] if e["ph"] == "s"
+            for c in [e["cat"]]}
+    assert any(c.startswith("blocked_on:") or c == "dep" for c in cats)
+
+
+def test_tracer_spans_and_schedule_recording():
+    tracer = trace.start("t")
+    with trace.span("plan", machine="summit"):
+        with trace.span("lower"):
+            pass
+    trace.record_schedule(_tpu_composed_result())
+    assert trace.stop() is tracer
+    assert not trace.is_active()
+
+    names = [e["name"] for e in tracer.events if e["ph"] == "X"]
+    assert "plan" in names and "lower" in names
+    # span events live on the wall-clock pid, schedules on their own pid
+    span_pids = {e["pid"] for e in tracer.events
+                 if e["ph"] == "X" and e["name"] in ("plan", "lower")}
+    assert span_pids == {trace.WALL_PID}
+    sched_pids = {e["pid"] for e in tracer.events
+                  if e["ph"] == "X" and e["name"] not in ("plan", "lower")}
+    assert sched_pids and trace.WALL_PID not in sched_pids
+
+
+def test_span_is_noop_without_tracer():
+    assert not trace.is_active()
+    with trace.span("anything"):
+        pass  # must not raise or record
+
+
+# --------------------------------------------------------------------------
+# Bottleneck attribution determinism (ISSUE 7 bugfix).
+# --------------------------------------------------------------------------
+
+def _two_resource_schedule(res_order, cap_order):
+    """Two resources tied on critical/busy; only capacity distinguishes."""
+    resources = {
+        name: Resource(name, capacity=cap_order[name]) for name in res_order
+    }
+    steps = tuple(
+        Step(name=f"s{i}", duration=1.0, resources=("aaa", "zzz"),
+             deps=(f"s{i-1}",) if i else ())
+        for i in range(4)
+    )
+    return Schedule(name="tie", steps=steps, resources=resources)
+
+
+@pytest.mark.parametrize("res_order", [("aaa", "zzz"), ("zzz", "aaa")])
+def test_bottleneck_stable_across_declaration_order(res_order):
+    caps = {"aaa": 4, "zzz": 1}
+    rep = bottleneck_report(
+        run_schedule(_two_resource_schedule(res_order, caps)))
+    # both resources carry identical critical/busy; the capacity-1 one is
+    # nearer saturation and must win regardless of declaration order
+    assert rep.bottleneck == "zzz"
+    assert rep.summary()  # renders without error, deterministic order
+
+
+def test_explain_bottleneck_stable_across_capacity_override_orderings():
+    from repro.core.machine import get_machine
+    from repro.core.schedule import compose_schedules, lower_strategy
+
+    spec = get_machine("summit")
+    a = lower_strategy(spec, "extra_msg", 1024.0, 100)
+    b = lower_strategy(spec, "extra_msg", 1024.0, 100)
+    overrides = {"cpu_net:off-node": 1, "cpu_cores": 40}
+    reports = []
+    for ov in (overrides, dict(reversed(list(overrides.items())))):
+        rep = bottleneck_report(run_schedule(
+            compose_schedules(spec, [(a, 0.0), (b, 0.0)],
+                              capacity_overrides=ov)))
+        reports.append(rep)
+    assert reports[0].bottleneck == reports[1].bottleneck == "cpu_net:off-node"
+    assert reports[0].summary() == reports[1].summary()
+
+
+# --------------------------------------------------------------------------
+# Metrics.
+# --------------------------------------------------------------------------
+
+def test_metrics_disabled_collects_nothing():
+    assert not metrics.enabled()
+    metrics.inc("x")
+    metrics.gauge("y", 1.0)
+    metrics.observe("z", 2.0)
+    snap = metrics.to_json()
+    assert not snap["counters"] and not snap["gauges"] and not snap["histograms"]
+
+
+def test_metrics_enabled_counters_histograms():
+    metrics.enable()
+    metrics.inc("c", 2)
+    metrics.inc("c")
+    metrics.gauge("g", 7.5)
+    for v in (1e-6, 2e-6, 1e-3):
+        metrics.observe("h", v)
+    snap = metrics.to_json()
+    assert snap["counters"]["c"] == 3.0
+    assert snap["gauges"]["g"] == 7.5
+    h = snap["histograms"]["h"]
+    assert h["count"] == 3
+    assert h["min"] == pytest.approx(1e-6)
+    assert h["max"] == pytest.approx(1e-3)
+    assert sum(h["log2_buckets"].values()) == 3
+    assert "c=3" in metrics.summary_line()
+    assert metrics.summary_line(prefixes=["nope."]) == "(no metrics)"
+
+
+def test_plan_cache_metrics_mirror_exactly():
+    from repro.comms.autotune import (
+        clear_plan_cache,
+        plan_cache_info,
+        select_schedule,
+    )
+
+    metrics.enable()
+    clear_plan_cache()
+    for _ in range(3):
+        select_schedule("summit", 4096.0, 8)
+    info = plan_cache_info()
+    snap = metrics.to_json()["counters"]
+    assert snap["plan_cache.hit"] == info["hits"] == 2
+    assert snap["plan_cache.miss"] == info["misses"] == 1
+    # selector instrumentation rode along
+    assert snap["plan.select_schedule.calls"] == 3
+    picks = [k for k in snap if k.startswith("plan.select_schedule.pick.")]
+    assert picks and sum(snap[k] for k in picks) == 3
+
+
+def test_engine_sink_installed_only_while_enabled():
+    from repro.core import events
+
+    assert events._OBS_SINK is None
+    metrics.enable()
+    assert events._OBS_SINK is not None
+    run_schedule(Schedule(
+        name="one", steps=(Step(name="s", duration=1.0),), resources={}))
+    assert metrics.to_json()["counters"]["engine.runs"] == 1.0
+    metrics.disable()
+    assert events._OBS_SINK is None
+
+
+def test_observed_decorator_latency_and_pick():
+    calls = []
+
+    @observed("test.op", pick=lambda out: out)
+    def op(x):
+        calls.append(x)
+        return f"pick{x}"
+
+    assert op(1) == "pick1"  # disabled: pure pass-through
+    assert metrics.to_json()["counters"] == {}
+    metrics.enable()
+    op(2)
+    op(2)
+    snap = metrics.to_json()
+    assert snap["counters"]["test.op.calls"] == 2
+    assert snap["counters"]["test.op.pick.pick2"] == 2
+    assert snap["histograms"]["test.op.seconds"]["count"] == 2
+    assert calls == [1, 2, 2]
+
+
+# --------------------------------------------------------------------------
+# Drift.
+# --------------------------------------------------------------------------
+
+def test_drift_summary_per_tier():
+    drift.record("m", "gpu_net", "fit:gpu_net", 1024.0, 1.1e-3, 1.0e-3)
+    drift.record("m", "gpu_net", "fit:gpu_net", 2048.0, 3.0e-3, 1.0e-3)
+    drift.record("m", "cpu_net", "fit:cpu_net", 1024.0, 2.0e-3, 2.0e-3)
+    s = drift.summary(tol=0.25)
+    assert s["n_records"] == 3
+    g = s["tiers"]["m/gpu_net"]
+    assert g["n"] == 2
+    assert g["mean_abs_rel_error"] == pytest.approx((0.1 + 2.0) / 2)
+    assert g["max_abs_rel_error"] == pytest.approx(2.0)
+    assert g["within_tol"] == pytest.approx(0.5)
+    assert s["tiers"]["m/cpu_net"]["within_tol"] == 1.0
+    assert drift.worst(1)[0].nbytes == 2048.0
+
+
+def test_spec_from_measurements_records_drift():
+    from repro.core.benchmark import spec_from_measurements
+
+    sizes = [1 << 10, 1 << 14, 1 << 18, 1 << 22]
+    # perfectly linear fake measurements: the fit must nail them
+    times = [1e-6 + s * 1e-9 for s in sizes]
+    spec_from_measurements("drift_probe", (sizes, times), register=False)
+    recs = [r for r in drift.records() if r.machine == "drift_probe"]
+    assert len(recs) == len(sizes)
+    assert all(r.tier == "gpu_net" for r in recs)
+    assert all(abs(r.rel_error) < 0.05 for r in recs)
+
+
+def test_measured_autotune_records_drift_and_agreement():
+    from repro.comms.autotune import measured_autotune
+
+    metrics.enable()
+    rec = measured_autotune(
+        {"a": lambda: None, "b": lambda: sum(range(2000))},
+        model_pick="a", reps=2, warmup=0,
+        predicted={"a": 1e-7, "b": 1e-5},
+        machine="probe", nbytes=512.0, tier="probe_tier",
+    )
+    assert rec.strategy == "a" and rec.agreed
+    recs = [r for r in drift.records() if r.machine == "probe"]
+    assert {r.collective for r in recs} == {"a", "b"}
+    assert all(r.tier == "probe_tier" and r.nbytes == 512.0 for r in recs)
+    assert metrics.to_json()["counters"]["autotune.agreed"] == 1.0
