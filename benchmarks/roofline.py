@@ -18,7 +18,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -24,6 +24,15 @@ import json
 import os
 import sys
 import time
+import traceback
+
+# what a *failing section* may raise: assertion-style claim failures plus
+# the arithmetic/lookup errors a wrong model surfaces as.  A NameError or
+# SyntaxError in the harness itself still crashes the run, as it should.
+_SECTION_ERRORS = (
+    AssertionError, ValueError, TypeError, KeyError, AttributeError,
+    IndexError, ZeroDivisionError, OverflowError, RuntimeError, OSError,
+)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -254,8 +263,11 @@ def main(argv=None) -> None:
         name = fn.__name__
         try:
             results[name] = bool(fn())
-        except Exception as e:  # noqa: BLE001
+        except _SECTION_ERRORS as e:
+            # a failed section is a failed claim, not a crashed harness —
+            # mark it False and keep the remaining sections' evidence
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
             results[name] = False
         print()
 
@@ -275,8 +287,11 @@ def main(argv=None) -> None:
             results["roofline_table"] = len(rows) >= 60
         else:
             print("# roofline: no dry-run records (run repro.launch.dryrun)")
-    except Exception as e:  # noqa: BLE001
-        print(f"# roofline summary failed: {e}")
+    except (OSError, ValueError, KeyError, ZeroDivisionError) as e:
+        # the roofline table is derived from on-disk dry-run records;
+        # missing/garbled records must not sink the analytic sections
+        print(f"# roofline summary failed: {type(e).__name__}: {e}")
+        traceback.print_exc(file=sys.stderr)
 
     elapsed = time.time() - t0
     crossovers = getattr(paper_models.registry_crossovers, "last_values", {})

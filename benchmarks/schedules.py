@@ -90,8 +90,8 @@ def schedule_contention() -> bool:
     spec = get_machine("summit")
     ok = True
     for strat, overrides in (
-        ("extra_msg", {"cpu_net:off-node": 1}),
-        ("dup_devptr", {"cpu_net:off-node": 2}),
+        ("extra_msg", {"cpu_net:off-node.rank0": 1}),
+        ("dup_devptr", {"cpu_net:off-node.rank0": 2}),
     ):
         ana = float(strategy_time(spec, strat, 1024.0, 100))
         sched = lower_strategy(

@@ -7,7 +7,6 @@
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.benchmark import bench_host_device_roundtrip

@@ -45,7 +45,7 @@ def contended_run() -> None:
     ana = float(strategy_time(spec, "extra_msg", 1024.0, 100))
     sched = lower_strategy(
         spec, "extra_msg", 1024.0, 100,
-        capacity_overrides={"cpu_net:off-node": 1},
+        capacity_overrides={"cpu_net:off-node.rank0": 1},
     )
     res = run_schedule(sched)
     print(f"closed-form (every lane has its own NIC slot): {ana*1e3:.3f} ms")

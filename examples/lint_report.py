@@ -1,0 +1,108 @@
+"""Worked example: catching a broken schedule *statically* (DESIGN.md §9).
+
+The event engine will faithfully execute a wrong schedule — a dropped
+dependency or an aliased resource pool yields a plausible number, not a
+crash.  ``repro.analysis`` is the layer that refuses first.  This script
+walks three situations:
+
+1. a clean cross-family composition (lowered strategy + library ring on
+   the same tier) passing every check, with the shared link pool named;
+2. the §6.1 aliasing bug, reconstructed: a legacy part that prices the
+   tier under its bare name composed with a library part using the
+   canonical ``{tier}.rank{r}`` pools — two names for one physical link,
+   so their contention silently never merges.  The analyzer flags it and
+   the strict seam refuses to build it;
+3. a byte-conservation slip: a "ring all-reduce" that forgets the
+   all-gather half moves half the required bytes — invisible to the
+   engine, caught by the closed-form accounting.
+
+Run:  PYTHONPATH=src python examples/lint_report.py
+"""
+from repro import analysis
+from repro.core.events import Resource, Schedule, Step
+from repro.core.machine import get_machine
+from repro.core.schedule import (
+    compose_schedules,
+    lower_strategy,
+    ring_allgather_schedule,
+    ring_allreduce_schedule,
+    ring_reduce_scatter_schedule,
+)
+
+
+def show(findings) -> None:
+    if not findings:
+        print("  (no findings)")
+    for f in analysis.sort_findings(findings):
+        loc = f" [{f.step or f.resource}]" if (f.step or f.resource) else ""
+        print(f"  {f.severity.upper():7} {f.check:32} {f.detail}{loc}")
+
+
+def clean_composition() -> None:
+    print("=" * 72)
+    print("1. Clean: CUDA-aware lowering + ring all-gather share one pool")
+    print("=" * 72)
+    spec = get_machine("summit")
+    lowered = lower_strategy(spec, "cuda_aware", float(1 << 20), 64)
+    lib = ring_allgather_schedule(spec, "gpu_net", 8, float(1 << 20))
+    composed = compose_schedules(spec, [lowered, lib])
+    shared = sorted(set(lowered.resources) & set(lib.resources))
+    print(f"shared pools: {shared}")
+    show(analysis.verify(composed))
+
+
+def aliased_pools() -> None:
+    print()
+    print("=" * 72)
+    print("2. Broken: legacy bare-name pool aliases the canonical lane pool")
+    print("=" * 72)
+    spec = get_machine("summit")
+    lib = ring_allgather_schedule(spec, "gpu_net", 8, float(1 << 20))
+    cap = lib.resources["gpu_net:off-node.rank0"].capacity
+    # a pre-§6.1 schedule: same physical link, priced under the bare name
+    legacy = Schedule(
+        name="legacy_lowering",
+        steps=(Step(name="xfer", duration=1e-3,
+                    resources=("gpu_net:off-node",), nbytes=float(1 << 20)),),
+        resources={"gpu_net:off-node": Resource(
+            "gpu_net:off-node", cap, tier="gpu_net:off-node")},
+    )
+    broken = Schedule(  # compose by hand so the strict seam can't refuse yet
+        name="aliased",
+        steps=tuple(s for s in lib.steps) + tuple(
+            Step(name=f"legacy/{s.name}", duration=s.duration,
+                 resources=s.resources, nbytes=s.nbytes)
+            for s in legacy.steps),
+        resources={**lib.resources, **legacy.resources},
+    )
+    show(analysis.analyze_contention(broken))
+    print("\nand the strict seam refuses to compose it at all:")
+    analysis.set_strict(True)
+    try:
+        compose_schedules(None, [legacy, lib])
+    except analysis.ScheduleValidationError as e:
+        print(f"  ScheduleValidationError: {e.args[0]} "
+              f"({len(e.findings)} error finding(s))")
+    finally:
+        analysis.set_strict(None)
+
+
+def lost_bytes() -> None:
+    print()
+    print("=" * 72)
+    print("3. Broken: an 'all-reduce' that skips the all-gather half")
+    print("=" * 72)
+    spec = get_machine("gh200")
+    p, B = 8, float(1 << 20)
+    full = ring_allreduce_schedule(spec, "gpu_net", p, B, directions=1)
+    half = ring_reduce_scatter_schedule(spec, "gpu_net", p, B, directions=1)
+    print("full ring all-reduce vs the closed form:")
+    show(analysis.check_collective(full, "ring_allreduce", p, B))
+    print("reduce-scatter only, *claiming* to be an all-reduce:")
+    show(analysis.check_collective(half, "ring_allreduce", p, B))
+
+
+if __name__ == "__main__":
+    clean_composition()
+    aliased_pools()
+    lost_bytes()

@@ -1,0 +1,166 @@
+"""Machine-spec linting: units, magnitudes, locality ordering, fit residuals.
+
+:func:`repro.core.machine.validate_spec` already hard-rejects non-finite or
+negative parameters at registration.  This module layers the *plausibility*
+lints on top — the checks that need judgment rather than arithmetic:
+
+* **magnitude** (warning) — alpha is seconds and beta seconds/byte; values
+  outside the envelope spanned by on-chip interconnects and WAN-grade
+  networks are almost certainly a units slip (ms-as-s, GB/s-as-s/B).
+* **tier ordering** (info / error) — crossing a socket, then a node
+  boundary should not get *cheaper*.  The paper's own verbatim tables
+  violate the naive rule (Summit's off-node GPU alpha undercuts its
+  on-socket one by ~3x — eager-protocol rendezvous effects), so mild
+  inversions are reported as info; only decimal-slip-scale inversions
+  (>50x) gate as errors.
+* **suspect params** (info) — segments the table transcription flags as
+  verbatim-but-physically-odd (``PostalParams.suspect``).
+* **fit residuals** (warning) — for specs built by
+  :func:`repro.core.benchmark.spec_from_measurements`, the fitted model
+  should reproduce the measurements it was fitted to; large relative
+  residuals mean the segment layout missed a protocol boundary.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Mapping, Tuple
+
+from repro.core.machine import MachineSpec, _PROBE_SIZES
+
+from repro.analysis.findings import ERROR, INFO, WARNING, Finding
+
+# generous physical envelope: NVLink-C2C-class latency/bandwidth out to
+# WAN-class; anything outside is a units mistake, not an exotic machine
+_ALPHA_RANGE = (1e-9, 1e-2)     # seconds
+_BETA_RANGE = (1e-14, 1e-6)     # seconds / byte
+
+# ordering inversions beyond this ratio gate as errors (a decimal slip);
+# the paper's own verbatim inversions top out around 6x
+_ORDERING_HARD_RATIO = 50.0
+
+_LOCALITY_ORDER = ("on-socket", "on-node", "off-node")
+_SOCKET_ORDER = ("on-socket", "off-socket")
+
+
+def lint_spec(spec: MachineSpec) -> List[Finding]:
+    """All plausibility findings for one machine spec."""
+    out: List[Finding] = []
+    sub = spec.name
+
+    for key, tier in spec.tiers.items():
+        suspect_seen = set()
+        for s in _PROBE_SIZES:
+            p = tier.params_for(s)
+            for label, v, (lo, hi) in (
+                ("alpha", p.alpha, _ALPHA_RANGE),
+                ("beta", p.beta, _BETA_RANGE),
+            ):
+                if v != 0.0 and not (lo <= v <= hi):
+                    out.append(Finding(
+                        "spec.magnitude", WARNING, sub,
+                        f"tier {key!r}: {label} {v:.3e} at {s:.0f} bytes is "
+                        f"outside the plausible range [{lo:.0e}, {hi:.0e}] "
+                        f"— units slip?",
+                        resource=key,
+                    ))
+                    break  # one magnitude finding per tier is enough
+            if getattr(p, "suspect", False):
+                sig = (p.alpha, p.beta)
+                if sig not in suspect_seen:
+                    suspect_seen.add(sig)
+                    out.append(Finding(
+                        "spec.suspect_param", INFO, sub,
+                        f"tier {key!r}: segment (alpha={p.alpha:.3e}, "
+                        f"beta={p.beta:.3e}) is flagged suspect (verbatim "
+                        f"paper value, physically odd)",
+                        resource=key,
+                    ))
+
+    # locality ordering per tier family ("gpu_net:on-socket" etc.)
+    families: dict = {}
+    for key in spec.tiers:
+        base, sep, qual = key.partition(":")
+        if sep:
+            families.setdefault(base, {})[qual] = spec.tiers[key]
+    for base, quals in families.items():
+        order = (
+            _LOCALITY_ORDER
+            if any(q in quals for q in ("on-node", "off-node"))
+            else _SOCKET_ORDER
+        )
+        present = [q for q in order if q in quals]
+        for near, far in zip(present, present[1:]):
+            # worst inversion over all probe sizes, one finding per term
+            worst = {"alpha": None, "beta": None}
+            for s in _PROBE_SIZES:
+                pn = quals[near].params_for(s)
+                pf = quals[far].params_for(s)
+                suspect = (
+                    getattr(pn, "suspect", False)
+                    or getattr(pf, "suspect", False)
+                )
+                for label, vn, vf in (
+                    ("alpha", pn.alpha, pf.alpha),
+                    ("beta", pn.beta, pf.beta),
+                ):
+                    if vf >= vn or vn <= 0.0:
+                        continue
+                    ratio = vn / vf if vf > 0 else math.inf
+                    cur = worst[label]
+                    if cur is None or ratio > cur[0]:
+                        worst[label] = (ratio, s, vn, vf, suspect)
+            for label, hit in worst.items():
+                if hit is None:
+                    continue
+                ratio, s, vn, vf, suspect = hit
+                # a segment the transcription already flags suspect never
+                # hard-gates: the oddity is acknowledged, not a new typo
+                sev = (
+                    ERROR if ratio > _ORDERING_HARD_RATIO and not suspect
+                    else INFO
+                )
+                out.append(Finding(
+                    "spec.tier_ordering", sev, sub,
+                    f"tier {base!r}: {label} at {s:.0f} bytes is "
+                    f"{ratio:.1f}x cheaper {far} ({vf:.3e}) than {near} "
+                    f"({vn:.3e})"
+                    + ("" if sev == ERROR else
+                       " — verbatim table quirk, not gating"),
+                    resource=f"{base}:{far}",
+                ))
+    return out
+
+
+def check_fit_residuals(
+    spec: MachineSpec,
+    measurements: Mapping[str, Iterable[Tuple[float, float]]],
+    *,
+    rel_tol: float = 0.5,
+) -> List[Finding]:
+    """Compare a fitted spec's tiers against the (size, seconds) samples
+    they were fitted to; flag relative residuals beyond ``rel_tol``."""
+    out: List[Finding] = []
+    for tier_key, samples in measurements.items():
+        try:
+            tier = spec.tiers[tier_key]
+        except KeyError:
+            out.append(Finding(
+                "spec.fit_missing_tier", WARNING, spec.name,
+                f"measurements name tier {tier_key!r} the spec lacks",
+                resource=tier_key,
+            ))
+            continue
+        for s, t_meas in samples:
+            t_model = float(tier.time(float(s)))
+            if t_meas <= 0.0:
+                continue
+            rel = abs(t_model - t_meas) / t_meas
+            if rel > rel_tol:
+                out.append(Finding(
+                    "spec.fit_residual", WARNING, spec.name,
+                    f"tier {tier_key!r}: model {t_model:.3e}s vs measured "
+                    f"{t_meas:.3e}s at {s:.0f} bytes "
+                    f"({rel:.0%} relative residual)",
+                    resource=tier_key,
+                ))
+    return out

@@ -20,7 +20,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import ml_dtypes

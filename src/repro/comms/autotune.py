@@ -17,7 +17,7 @@ import logging
 import math
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 

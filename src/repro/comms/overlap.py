@@ -15,7 +15,7 @@ the dataflow graph*.  These helpers create that separation:
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

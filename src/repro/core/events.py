@@ -55,10 +55,19 @@ class Resource:
 
     Examples: a NIC with ``width`` injection lanes, a copy/DMA engine
     (capacity 1 — the §2.2 serialization mechanism), a node's CPU core pool.
+
+    ``tier`` names the physical transport tier this resource is a slice of
+    (``"gpu_net:off-node"``, ``"dcn"``); builders populate it so the static
+    contention analysis (:mod:`repro.analysis.contention`) can tell that two
+    differently-named pools alias the same physical links.  None means
+    "unknown" — the analyzer falls back to parsing the canonical
+    ``{tier}.rank{r}`` / ``{tier}.engine`` / ``{tier}.root`` naming scheme
+    (DESIGN.md §6.1).
     """
 
     name: str
     capacity: int = 1
+    tier: Optional[str] = None
 
     def __post_init__(self):
         if self.capacity < 1:
@@ -95,6 +104,14 @@ class Step:
     release: float = 0.0
 
     def __post_init__(self):
+        # NaN compares false against everything, so the sign checks alone
+        # would wave non-finite prices through into the engine's heaps —
+        # check finiteness explicitly (the static verifier re-checks these
+        # on schedules built without going through this constructor).
+        if self.duration != self.duration or self.duration == float("inf"):
+            raise ValueError(f"step {self.name!r}: non-finite duration")
+        if self.release != self.release or self.release == float("inf"):
+            raise ValueError(f"step {self.name!r}: non-finite release time")
         if self.duration < 0:
             raise ValueError(f"step {self.name!r}: negative duration")
         if self.release < 0:

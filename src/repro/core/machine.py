@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 import numpy as np
@@ -469,6 +470,47 @@ def plan_costs(
 
 
 # --------------------------------------------------------------------------
+# Register-time spec validation.
+#
+# Hard sanity only: a typo'd tier parameter (negative alpha, NaN beta, zero
+# width) used to surface as a nonsense simulation hours later; rejecting it
+# at registration pins the blame on the spec.  The checks are deliberately
+# self-contained — repro.analysis.specs layers the softer plausibility
+# lints (unit magnitudes, locality ordering) on top, and importing it here
+# would cycle (analysis modules import this one).
+# --------------------------------------------------------------------------
+
+def validate_spec(spec: MachineSpec) -> None:
+    """Reject structurally broken specs (non-finite/negative tier params).
+
+    Raises ``ValueError`` naming the machine, tier and offending value.
+    Probes each tier's postal model at :data:`_PROBE_SIZES` so segmented
+    models are checked in every protocol segment.
+    """
+    for key, tier in spec.tiers.items():
+        if tier.width < 1:
+            raise ValueError(
+                f"machine {spec.name!r} tier {key!r}: width {tier.width} < 1"
+            )
+        if tier.beta_N is not None and not (
+            math.isfinite(tier.beta_N) and tier.beta_N >= 0.0
+        ):
+            raise ValueError(
+                f"machine {spec.name!r} tier {key!r}: "
+                f"beta_N {tier.beta_N!r} must be finite and >= 0"
+            )
+        for s in _PROBE_SIZES:
+            p = tier.params_for(s)
+            for field, v in (("alpha", p.alpha), ("beta", p.beta)):
+                if not (math.isfinite(v) and v >= 0.0):
+                    raise ValueError(
+                        f"machine {spec.name!r} tier {key!r}: {field} {v!r} "
+                        f"at {s:.0f} bytes must be finite and >= 0 "
+                        f"(seconds resp. seconds/byte)"
+                    )
+
+
+# --------------------------------------------------------------------------
 # Registry.
 # --------------------------------------------------------------------------
 
@@ -488,8 +530,15 @@ def registry_generation() -> int:
 def register_machine(
     name: str, spec_or_factory: Union[MachineSpec, Callable[..., MachineSpec]]
 ) -> None:
-    """Register a spec (or a factory taking shape kwargs) under ``name``."""
+    """Register a spec (or a factory taking shape kwargs) under ``name``.
+
+    Spec instances are validated on the spot; factory outputs are validated
+    lazily by :func:`get_machine` when first built (the factory may need
+    call-time shape kwargs).
+    """
     global _GENERATION
+    if isinstance(spec_or_factory, MachineSpec):
+        validate_spec(spec_or_factory)
     _REGISTRY[name] = spec_or_factory
     _GENERATION += 1
     stale = [k for k in _CACHE if k[0] == name]
@@ -510,6 +559,7 @@ def get_machine(name: str, **factory_kwargs) -> MachineSpec:
     spec = _CACHE.get(key)
     if spec is None:
         spec = entry(**factory_kwargs)
+        validate_spec(spec)
         _CACHE[key] = spec
     return spec
 

@@ -67,6 +67,16 @@ from repro.obs import trace as obs_trace
 _COPY_KINDS = ("copy_d2h", "copy_h2d")
 
 
+def _maybe_verify(sched: Schedule) -> Schedule:
+    """Strict-validation seam (repro.analysis.maybe_verify): no-op unless
+    strict mode is armed.  Imported lazily — repro.core's package __init__
+    imports this module, and repro.analysis imports repro.core.events, so
+    a module-level import here would cycle during package init."""
+    from repro.analysis import maybe_verify
+
+    return maybe_verify(sched)
+
+
 # --------------------------------------------------------------------------
 # Lowering memoization.
 #
@@ -143,10 +153,12 @@ class ScheduleBuilder:
         self._resources: Dict[str, Resource] = {}
         self.frontier: Tuple[str, ...] = ()
 
-    def resource(self, name: str, capacity: int = 1) -> str:
+    def resource(self, name: str, capacity: int = 1, tier: Optional[str] = None) -> str:
         cur = self._resources.get(name)
         if cur is None or capacity > cur.capacity:
-            self._resources[name] = Resource(name, capacity)
+            self._resources[name] = Resource(
+                name, capacity, tier=tier if cur is None else (cur.tier or tier)
+            )
         return name
 
     def step(
@@ -177,7 +189,7 @@ class ScheduleBuilder:
         resources = dict(self._resources)
         for rname, cap in (capacity_overrides or {}).items():
             if rname in resources:
-                resources[rname] = Resource(rname, cap)
+                resources[rname] = Resource(rname, cap, tier=resources[rname].tier)
         return Schedule(
             name=self.name, steps=tuple(self._steps), resources=resources,
             description=self.description,
@@ -240,7 +252,12 @@ def lower_path(
                 alpha = alpha + trav.alpha_extra
             a_t = alpha * n_eff
             b_t = beta * (n_eff * s_eff)
-            link = b.resource(tier.name, max(tier.width, L))
+            # canonical link-pool name: the lowering models ONE representative
+            # rank, whose lanes are rank 0's — the same pool the schedule
+            # library declares, so cross-family composition merges (§6.1)
+            link = b.resource(
+                f"{tier.name}.rank0", max(tier.width, L), tier=tier.name
+            )
             res = (link,)
             if trav.tier.startswith("cpu"):
                 pool_cap = int(spec.fact("cpu_cores_per_node", max(L, 1)))
@@ -263,7 +280,7 @@ def lower_path(
                 # serializes the launches; per-copy bandwidth is its share.
                 t0 = float(tier.time(0.0))
                 bw = float(tier.time(total)) - t0
-                engine = b.resource(f"{tier.name}.engine", 1)
+                engine = b.resource(f"{tier.name}.engine", 1, tier=tier.name)
                 for lane in range(L):
                     new.append(b.step(
                         f"{tag}.copy{lane}", t0 + bw / L, resources=(engine,),
@@ -279,9 +296,11 @@ def lower_path(
                 a_t = alpha * 1.0
                 b_t = beta * (1.0 * share)
                 if tier.serialize_alpha:
-                    res = (b.resource(f"{tier.name}.engine", max(1, L)),)
+                    res = (b.resource(f"{tier.name}.engine", max(1, L),
+                                      tier=tier.name),)
                 else:
-                    res = (b.resource(tier.name, max(tier.width, L)),)
+                    res = (b.resource(f"{tier.name}.rank0",
+                                      max(tier.width, L), tier=tier.name),)
                 for lane in range(L):
                     new.append(b.step(
                         f"{tag}.bulk{lane}", a_t + b_t, resources=res,
@@ -300,7 +319,7 @@ def lower_path(
                 alpha = alpha + trav.alpha_extra
             # L-1 scatter/gather messages issued by ONE root core: a
             # capacity-1 resource serializes them (the Extra-Msg staging).
-            root = b.resource(f"{tier.name}.root", 1)
+            root = b.resource(f"{tier.name}.root", 1, tier=tier.name)
             for i in range(L - 1):
                 new.append(b.step(
                     f"{tag}.redist{i}", alpha + beta * share, resources=(root,),
@@ -350,6 +369,7 @@ def lower_strategy(
             capacity_overrides=capacity_overrides,
             name=f"{spec.name}:{strategy}",
         )
+    _maybe_verify(sched)
     if key is not None:
         _memo_put(key, sched)
     return sched
@@ -459,17 +479,17 @@ def compose_schedules(
 
     for rname, cap in (capacity_overrides or {}).items():
         if rname in resources:
-            resources[rname] = Resource(rname, cap)
+            resources[rname] = Resource(rname, cap, tier=resources[rname].tier)
 
     if name is None:
         brand = "" if spec is None else f"{resolve_spec(spec).name}:"
         mode = "chain" if chain else "compose"
         name = f"{brand}{mode}({'+'.join(s.name for s, _ in norm)})"
-    return Schedule(
+    return _maybe_verify(Schedule(
         name=name, steps=tuple(steps), resources=resources,
         description=f"{'chained' if chain else 'overlapped'} composition of "
                     f"{len(norm)} schedules on shared resources",
-    )
+    ))
 
 
 def chain_schedules(
@@ -516,7 +536,8 @@ def _round_robin(
     ``capacity_overrides`` to force it).
     """
     links = [
-        b.resource(f"{tier.name}.rank{r}", max(tier.width, lanes_per_rank))
+        b.resource(f"{tier.name}.rank{r}", max(tier.width, lanes_per_rank),
+                   tier=tier.name)
         for r in range(ranks)
     ]
     for i, (kind, nbytes, nm) in enumerate(rounds):
@@ -729,8 +750,9 @@ def node_aware_alltoall_schedule(
         f"{spec.name}:node_aware_alltoall[{n_ranks}]",
         "two-level node-aware all-to-all (aggregate per destination node)",
     )
-    intra_res = b.resource(f"{intra.name}.intra", max(g, 1))
-    inter_res = b.resource(inter.name, max(inter.width, g))
+    intra_res = b.resource(f"{intra.name}.intra", max(g, 1), tier=intra.name)
+    inter_res = b.resource(f"{inter.name}.rank0", max(inter.width, g),
+                           tier=inter.name)
 
     def intra_phase(label: str) -> None:
         nbytes = max(n_nodes - 1, 0) * msg_bytes
@@ -794,7 +816,7 @@ def ep_dispatch_schedules(
 
     def hop_schedule(name: str, hops: List[Tuple[str, float]]) -> Schedule:
         b = ScheduleBuilder(f"{spec.name}:ep_{name}", f"EP dispatch ({name})")
-        res = b.resource(tier.name, links)
+        res = b.resource(f"{tier.name}.rank0", links, tier=tier.name)
         for i, (kind, n_eff) in enumerate(hops):
             alpha, beta, _ = tier.postal_terms(s_total / max(n_eff, 1.0), 1)
             a_t = n_eff * alpha
@@ -972,7 +994,8 @@ def moe_alltoall_schedules(
     # same per-rank link pool name/capacity as the ring library, so
     # compose_schedules merges it with any other ICI schedule's pool
     if E > 1:
-        res = direct.resource(f"{tier.name}.rank0", max(tier.width, links))
+        res = direct.resource(f"{tier.name}.rank0", max(tier.width, links),
+                              tier=tier.name)
         per_msg = s / (E - 1)
         alpha, beta, cap = tier.postal_terms(per_msg, 1)
         alpha = alpha + hop_alpha * max(hops - 1, 0)
@@ -991,7 +1014,8 @@ def moe_alltoall_schedules(
     )
     n_rounds = int(math.ceil(math.log2(E))) if E > 1 else 0
     if n_rounds:
-        res = tree.resource(f"{tier.name}.rank0", max(tier.width, links))
+        res = tree.resource(f"{tier.name}.rank0", max(tier.width, links),
+                            tier=tier.name)
         per_round = s / 2
         alpha, beta, cap = tier.postal_terms(per_round, 1)
         for i in range(n_rounds):
@@ -1071,6 +1095,8 @@ def candidate_schedules(
                     spec, nbytes_per_msg, P, ranks_per_node=g,
                     capacity_overrides=capacity_overrides,
                 )
+    for sched in cands.values():
+        _maybe_verify(sched)
     if key is not None:
         _memo_put(key, dict(cands))
     return cands

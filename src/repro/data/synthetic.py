@@ -8,7 +8,7 @@ tests assert (bitwise identical training resume).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

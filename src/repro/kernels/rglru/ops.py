@@ -1,7 +1,6 @@
 """Jit-ready RG-LRU scan wrapper: Pallas kernel or scan oracle."""
 from __future__ import annotations
 
-import jax
 
 from repro.kernels.config import interpret_mode
 from repro.kernels.rglru.kernel import rglru_scan

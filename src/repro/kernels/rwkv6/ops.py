@@ -1,7 +1,6 @@
 """Jit-ready WKV6 wrapper: Pallas kernel or recurrence oracle."""
 from __future__ import annotations
 
-import jax
 
 from repro.kernels.config import interpret_mode
 from repro.kernels.rwkv6.kernel import wkv6

@@ -22,15 +22,13 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh both] [--tag variantname ...]
 """
 import argparse
-import dataclasses
 import functools
 import json
 import re
+import sys
 import time
 import traceback
-from typing import Dict, Optional
 
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze as hlo_analyze
 from repro.obs import trace as obs_trace
@@ -43,7 +41,6 @@ def build_cell(arch: str, shape_name: str, mesh_kind: str, variant: dict):
     """Returns (jitted fn, abstract args tuple, meta dict) for one cell."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import SHAPES, get_config
     from repro.configs.base import RunConfig
@@ -273,10 +270,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: dict, outdir: 
                 "collective_dcn_bytes": hc.collective_dcn_total(),
             }
             rec["ok"] = True
-    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+    except (ValueError, TypeError, KeyError, AttributeError, RuntimeError,
+            NotImplementedError, OSError) as e:
+        # record the failure, keep sweeping: shape/sharding mistakes surface
+        # as ValueError/TypeError, XLA compile failures and OOM as
+        # RuntimeError (XlaRuntimeError subclasses it), HLO persistence as
+        # OSError — anything else is a harness bug and should crash loudly
         rec["ok"] = False
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[dryrun] {cell_id}: failed with {type(e).__name__}: {e}",
+              file=sys.stderr, flush=True)
     rec["total_s"] = round(time.time() - t0, 1)
     os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, cell_id + ".json")
@@ -349,8 +353,12 @@ def main():
                             print(f"[dryrun] {cell_id}: cached ok={old['ok']}")
                             n_ok += 1
                             continue
-                    except Exception:
-                        pass
+                    except (OSError, ValueError, AttributeError) as e:
+                        # unreadable/truncated cache record — re-run the cell
+                        # (json decode errors are ValueError subclasses)
+                        print(f"[dryrun] {cell_id}: ignoring unreadable "
+                              f"cache record ({type(e).__name__}: {e})",
+                              file=sys.stderr)
                 rec = run_cell(arch, shape, mk, variant, args.out)
                 if rec.get("ok") in (True, "skipped"):
                     n_ok += 1

@@ -6,7 +6,7 @@ any jax import; everything else sees the real device count.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

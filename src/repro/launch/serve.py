@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, smoke_config
-from repro.launch.mesh import dp_axes_of, make_mesh
+from repro.launch.mesh import dp_axes_of
 from repro.launch.train import build_mesh
 from repro.models import decode as dec
 from repro.models import init_params

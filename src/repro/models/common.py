@@ -1,7 +1,6 @@
 """Shared building blocks: norms, activations, RoPE, init, MLP."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -41,7 +41,6 @@ from repro.models.transformer import (
     _positions_embed,
     _run_encoder,
 )
-from jax.sharding import PartitionSpec as P
 
 
 # --------------------------------------------------------------------------

@@ -26,7 +26,7 @@ enough to make both paths agree exactly).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,7 @@ All are pure functions of (params, state, batch) suitable for
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

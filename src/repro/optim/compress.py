@@ -13,7 +13,7 @@ pod axis, dequantize + sum, all-gather over ICI.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 

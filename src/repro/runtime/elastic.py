@@ -8,7 +8,7 @@ loss trajectory is unchanged — the elastic test asserts loss continuity.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 

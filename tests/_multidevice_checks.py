@@ -32,7 +32,7 @@ from repro.comms import (
     reduce_scatter,
     ring_shift,
 )
-from repro.comms.overlap import chunked_collective, microbatched_grads
+from repro.comms.overlap import chunked_collective
 from repro.optim.compress import compressed_allreduce
 
 ok = lambda name: print(f"OK {name}", flush=True)

@@ -10,6 +10,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _strict_schedule_validation():
+    """Run the whole suite with the static verifier armed: every schedule
+    built through lower_strategy / candidate_schedules / compose_schedules
+    is verified on construction (repro.analysis.maybe_verify), so a
+    structurally broken or contention-unsound schedule fails loudly at the
+    build site instead of producing a plausible-but-wrong simulation."""
+    from repro import analysis
+
+    analysis.set_strict(True)
+    yield
+    analysis.set_strict(None)
+
+
 @pytest.fixture(autouse=True)
 def _fresh_planner_caches():
     """Isolate the planner decision caches between tests.

@@ -129,10 +129,10 @@ def test_compose_shared_restricted_capacity_strictly_worse():
     free = run_schedule(compose_schedules(spec, [(a, 0.0), (b, 0.0)]))
     tight = run_schedule(compose_schedules(
         spec, [(a, 0.0), (b, 0.0)],
-        capacity_overrides={"cpu_net:off-node": 1},
+        capacity_overrides={"cpu_net:off-node.rank0": 1},
     ))
     assert tight.makespan > free.makespan * (1 + 1e-12)
-    assert bottleneck_report(tight).bottleneck == "cpu_net:off-node"
+    assert bottleneck_report(tight).bottleneck == "cpu_net:off-node.rank0"
 
 
 def test_compose_order_permutation_invariant():

@@ -107,7 +107,7 @@ def test_composition_and_contention_parity():
     ))
     for cap in (1, 2, 4):
         assert_identical(S.lower_strategy(
-            spec, "extra_msg", 65536.0, 8, capacity_overrides={"gpu_net": cap}
+            spec, "extra_msg", 65536.0, 8, capacity_overrides={"cpu_net:off-node.rank0": cap}
         ))
 
 
@@ -115,7 +115,7 @@ def test_bottleneck_report_matches_either_engine():
     """Single-pass report fields agree when built from either engine's run."""
     spec = get_machine("summit")
     sched = S.lower_strategy(spec, "extra_msg", 65536.0, 8,
-                             capacity_overrides={"gpu_net": 2})
+                             capacity_overrides={"cpu_net:off-node.rank0": 2})
     ra = bottleneck_report(run_schedule(sched))
     rb = bottleneck_report(run_schedule_reference(sched))
     assert ra.bottleneck == rb.bottleneck

@@ -8,7 +8,6 @@ recovery under multiplicative noise, and immunity to a single outlier that
 provably broke the old heuristic.
 """
 import numpy as np
-import pytest
 
 from repro.core.fitting import detect_breakpoints, fit_transport_model
 from repro.core.params import Locality

@@ -4,7 +4,6 @@ import subprocess
 import sys
 import tempfile
 
-import numpy as np
 import pytest
 
 HERE = os.path.dirname(__file__)

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
 (interpret=True executes the kernel bodies on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

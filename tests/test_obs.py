@@ -183,14 +183,14 @@ def test_explain_bottleneck_stable_across_capacity_override_orderings():
     spec = get_machine("summit")
     a = lower_strategy(spec, "extra_msg", 1024.0, 100)
     b = lower_strategy(spec, "extra_msg", 1024.0, 100)
-    overrides = {"cpu_net:off-node": 1, "cpu_cores": 40}
+    overrides = {"cpu_net:off-node.rank0": 1, "cpu_cores": 40}
     reports = []
     for ov in (overrides, dict(reversed(list(overrides.items())))):
         rep = bottleneck_report(run_schedule(
             compose_schedules(spec, [(a, 0.0), (b, 0.0)],
                               capacity_overrides=ov)))
         reports.append(rep)
-    assert reports[0].bottleneck == reports[1].bottleneck == "cpu_net:off-node"
+    assert reports[0].bottleneck == reports[1].bottleneck == "cpu_net:off-node.rank0"
     assert reports[0].summary() == reports[1].summary()
 
 

@@ -18,7 +18,7 @@ from repro.core import (
     paper_model,
     three_step_time,
 )
-from repro.core.fitting import fit_segmented, round_trip_check
+from repro.core.fitting import round_trip_check
 from repro.core.maxrate import MaxRateParams, maxrate_time, node_split_time, saturating_ppn
 from repro.core.params import CopyDirection, Protocol
 from repro.core.planner import (

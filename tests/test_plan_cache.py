@@ -6,7 +6,6 @@ the registry generation bump (any register_machine call drops the plan
 cache), and the explicit clear in set_active_machine.
 """
 import numpy as np
-import pytest
 
 from repro.comms import autotune
 from repro.comms.autotune import (

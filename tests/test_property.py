@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.fitting import fit_postal
 from repro.core.maxrate import MaxRateParams, maxrate_time, multi_message_time
 from repro.core.params import Locality, PostalParams
-from repro.core.postal import SegmentedPostalModel, crossover_size, paper_model
+from repro.core.postal import crossover_size, paper_model
 from repro.core.simulate import CollectiveProblem, simulate_all
 from repro.core.topology import SUMMIT, TpuPodTopology
 from repro.optim.compress import dequantize_int8, quantize_int8, quantize_with_feedback

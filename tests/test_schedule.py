@@ -160,9 +160,9 @@ def test_dup_devptr_serialization_emerges_from_queueing():
 # --------------------------------------------------------------------------
 
 @pytest.mark.parametrize("strat,overrides", [
-    ("extra_msg", {"cpu_net:off-node": 1}),
+    ("extra_msg", {"cpu_net:off-node.rank0": 1}),
     ("extra_msg", {"cpu_cores": 2}),
-    ("dup_devptr", {"cpu_net:off-node": 2}),
+    ("dup_devptr", {"cpu_net:off-node.rank0": 2}),
 ])
 def test_contention_dominates_closed_form(strat, overrides):
     spec = get_machine("summit")
@@ -183,7 +183,7 @@ def test_contention_never_helps():
     for cap in (6, 3, 2, 1):
         res = run_schedule(lower_strategy(
             spec, "extra_msg", 1024.0, 100,
-            capacity_overrides={"cpu_net:off-node": cap}))
+            capacity_overrides={"cpu_net:off-node.rank0": cap}))
         if prev is not None:
             assert res.makespan >= prev - 1e-18
         prev = res.makespan
@@ -197,7 +197,7 @@ def test_bottleneck_eager_is_latency_bound_link():
     """Small eager messages, many of them: the NIC link saturates on alpha."""
     spec = get_machine("summit")
     rep = bottleneck_report(simulate_schedule(spec, "cuda_aware", 1024.0, 100))
-    assert rep.bottleneck == "gpu_net:off-node"
+    assert rep.bottleneck == "gpu_net:off-node.rank0"
     assert rep.binding == "latency"
 
 
@@ -207,7 +207,7 @@ def test_bottleneck_rendezvous_is_bandwidth_or_injection_bound():
     spec = get_machine("summit")
     rep = bottleneck_report(
         simulate_schedule(spec, "cuda_aware", float(2**24), 1))
-    assert rep.bottleneck == "gpu_net:off-node"
+    assert rep.bottleneck == "gpu_net:off-node.rank0"
     assert rep.binding in ("bandwidth", "injection")
 
 
@@ -394,4 +394,4 @@ def test_autotune_schedule_selection():
     assert pick in ("bruck_alltoall", "node_aware_alltoall",
                     "strategy:extra_msg", "strategy:dup_devptr")
     rep = explain_bottleneck("summit", 1024.0, 100, strategy="cuda_aware")
-    assert rep.bottleneck == "gpu_net:off-node" and rep.binding == "latency"
+    assert rep.bottleneck == "gpu_net:off-node.rank0" and rep.binding == "latency"

@@ -2,7 +2,6 @@
 sharding rules, schedules."""
 import os
 import tempfile
-import time
 import types
 
 import jax
