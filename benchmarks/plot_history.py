@@ -5,7 +5,9 @@ reports in ``benchmarks/history/``, orders them by their ``generated_at``
 stamp (same rule as ``run.py --history``), and writes one SVG with
 
 * a line panel per numeric trajectory — the Fig-5 crossover message counts,
-  the overlap speedups, and the planner_speed warm/engine speedups;
+  the overlap speedups, the planner_speed warm/engine speedups, the drift
+  ledger's per-machine mean |rel error|, and the link-health drill's
+  detection latency / re-plan speedup;
 * a text ribbon of the schedule-search winners per report, so attribution
   flips are visible at a glance.
 
@@ -90,6 +92,33 @@ def collect_panels(reports) -> List[Tuple[str, Dict[str, List[Optional[float]]]]
                 reports, lambda r: r["trace_overhead"]["traced_slowdown"]),
             "disabled": _series(
                 reports, lambda r: r["trace_overhead"]["disabled_overhead"]),
+        }))
+    # drift ledger keys are "machine/tier"; aggregate to one mean-|rel err|
+    # series per machine so a fit that quietly worsens shows as a rising
+    # line even when no single tier trips the in-run gate
+    machines = sorted({
+        k.split("/", 1)[0]
+        for _, r in reports
+        for k in r.get("drift", {}).get("tiers", {})
+    })
+    if machines:
+        def machine_err(rep: dict, m: str) -> float:
+            errs = [t["mean_abs_rel_error"]
+                    for k, t in rep["drift"]["tiers"].items()
+                    if k.split("/", 1)[0] == m]
+            if not errs:
+                raise KeyError(m)
+            return sum(errs) / len(errs)
+        panels.append(("model drift: mean |rel error| per machine", {
+            m: _series(reports, lambda r, m=m: machine_err(r, m))
+            for m in machines
+        }))
+    if any("link_health" in r for _, r in reports):
+        panels.append(("link health drill: detection + re-plan win", {
+            "detected_in_records": _series(
+                reports, lambda r: r["link_health"]["detection_records"]),
+            "replan_speedup_x": _series(
+                reports, lambda r: r["link_health"]["speedup"]),
         }))
     return panels
 

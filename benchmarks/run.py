@@ -111,6 +111,16 @@ def print_history(history_dir: str) -> int:
     for tier in tiers:
         print(f"  drift     {tier:<28} within_tol: " + fmt(series(
             lambda r, t=tier: round(r["drift"]["tiers"][t]["within_tol"], 2))))
+    if any("link_health" in r for _, r in reports):
+        print("  health    detection_records        " + fmt(series(
+            lambda r: r["link_health"]["detection_records"])))
+        print("  health    replan_speedup           " + fmt(series(
+            lambda r: round(r["link_health"]["speedup"], 2))))
+    if any("congestion" in r for _, r in reports):
+        print("  congest   fitted_capacity          " + fmt(series(
+            lambda r: r["congestion"]["capacity"])))
+        print("  congest   mean_rel_err             " + fmt(series(
+            lambda r: round(r["congestion"]["mean_rel_err"], 3))))
     fails = series(
         lambda r: sorted(k for k, v in r.get("sections", {}).items() if not v)
     )
@@ -208,6 +218,29 @@ def compare_reports(new: dict, ref: dict) -> list:
         drift.append("metrics snapshot disappeared (or empty counters)")
     if ref.get("trace_overhead") and not new.get("trace_overhead"):
         drift.append("trace_overhead section disappeared")
+    # link_health: the degradation drill is deterministic, so its decision
+    # clauses gate hard — losing detection or the re-plan win is a real
+    # regression in the detect->refit->re-plan loop, never host noise.
+    ref_lh = ref.get("link_health", {})
+    new_lh = new.get("link_health", {})
+    if ref_lh:
+        if not new_lh:
+            drift.append("link_health section disappeared")
+        else:
+            for key in ("detected", "replanned_beats_stale",
+                        "fingerprint_changed"):
+                if ref_lh.get(key) and not new_lh.get(key):
+                    drift.append(f"link_health {key!r} regressed: "
+                                 f"True -> {new_lh.get(key)!r}")
+            old_n = ref_lh.get("detection_records")
+            new_n = new_lh.get("detection_records")
+            if old_n is not None and (new_n is None or new_n > 2 * old_n):
+                drift.append(f"link_health detection latency regressed: "
+                             f"{old_n} -> {new_n} records")
+    # congestion: presence + structural validity only (live concurrency
+    # timing is host noise; the agreement numbers ride in the report)
+    if ref.get("congestion") and not new.get("congestion"):
+        drift.append("congestion calibration section disappeared")
     return drift
 
 
@@ -309,6 +342,9 @@ def main(argv=None) -> None:
         "drift": getattr(observability.model_drift, "last_values", {}),
         "metrics_health": getattr(
             observability.metrics_health, "last_values", {}),
+        "link_health": getattr(observability.link_health, "last_values", {}),
+        "congestion": getattr(
+            observability.congestion_calibration, "last_values", {}),
         "metrics": obs_metrics.to_json(),
         "ok": all(results.values()),
     }

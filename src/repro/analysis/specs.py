@@ -47,6 +47,21 @@ def lint_spec(spec: MachineSpec) -> List[Finding]:
     out: List[Finding] = []
     sub = spec.name
 
+    # data-quality provenance: a spec whose constants nobody measured
+    # ("representative" placeholders like the gh200 entry) or that came
+    # from a live fit should say so in every lint report, so decisions
+    # made against it carry the right confidence
+    if spec.provenance != "measured":
+        out.append(Finding(
+            "spec.provenance", INFO, sub,
+            f"constants are {spec.provenance!r}, not measured — "
+            + ("plausible figures with no hardware behind them; replace "
+               "with measurements when the machine is reachable"
+               if spec.provenance == "representative"
+               else "live-fitted parameters; see the drift ledger for "
+                    "fit residuals"),
+        ))
+
     for key, tier in spec.tiers.items():
         suspect_seen = set()
         for s in _PROBE_SIZES:

@@ -150,6 +150,7 @@ def spec_from_measurements(
     staged_net: Optional[Samples] = None,
     copy_d2h: Optional[Samples] = None,
     copy_h2d: Optional[Samples] = None,
+    placed_pairs: Optional[Dict[str, Samples]] = None,
     direct_beta_N: Optional[float] = None,
     staged_beta_N: Optional[float] = None,
     injectors_per_node: int = 1,
@@ -165,6 +166,14 @@ def spec_from_measurements(
       and the host<->device copy tiers; when all three are present the spec
       also declares the 3-step family (``three_step``/``extra_msg``/
       ``dup_devptr``) and the Fig-5 crossover becomes measurable.
+    * ``placed_pairs`` — locality-split ping-pong samples of the direct
+      path, keyed by placement class (``"on-socket"``, ``"on-node"``,
+      ``"off-node"``): pairs pinned on-socket, across sockets of one node,
+      and across nodes.  Each class fits its own ``gpu_net:{class}`` tier,
+      so :meth:`~repro.core.machine.MachineSpec.resolve_tier` picks the
+      placement-correct model exactly as it does for the paper's Table-I
+      localities — a degraded machine can be *fitted* per locality live,
+      not just declared (ROADMAP item 5).
     * ``direct_beta_N``/``staged_beta_N`` — injection caps, e.g. from
       :func:`repro.core.fitting.fit_maxrate_beta_N` on a ppn sweep (NaN is
       treated as "cap never reached").
@@ -203,6 +212,15 @@ def spec_from_measurements(
                 width=lanes_per_injector,
                 serialize_alpha=True,
             )
+    if placed_pairs:
+        for loc_key, data in placed_pairs.items():
+            tier_key = f"gpu_net:{loc_key}"
+            tiers[tier_key] = TransportTier(
+                name=tier_key,
+                model=fit_transport_model(*_samples(data), thresholds=thresholds),
+                beta_N=cap(direct_beta_N),
+                width=injectors_per_node,
+            )
     # fitted-vs-measured residuals per tier: every sample the fit consumed
     # becomes a drift record, so the fit quality itself is visible to
     # run.py --compare (a tier whose model stops matching its own samples
@@ -212,6 +230,9 @@ def spec_from_measurements(
         tier_samples.update(
             cpu_net=staged_net, copy_d2h=copy_d2h, copy_h2d=copy_h2d
         )
+    if placed_pairs:
+        for loc_key, data in placed_pairs.items():
+            tier_samples[f"gpu_net:{loc_key}"] = data
     for tier_name, data in tier_samples.items():
         tier = tiers[tier_name]
         for s, t in zip(*_samples(data)):
@@ -242,6 +263,7 @@ def spec_from_measurements(
         else ("gpudirect", "gpudirect"),
         description=f"fitted from measurements ({len(_samples(direct_net)[0])} "
                     f"direct-net samples)",
+        provenance="fitted",
     )
     if register:
         register_machine(name, spec)

@@ -179,6 +179,13 @@ class MachineSpec:
     facts: Mapping[str, float] = dataclasses.field(default_factory=dict)
     crossover_paths: Tuple[str, str] = ("gpudirect", "three_step")
     description: str = ""
+    # where the tier constants came from: "measured" (paper tables / live
+    # benchmark), "representative" (plausible figures, no hardware behind
+    # them), or "fitted" (spec_from_measurements / congestion refits).
+    # Deliberately NOT part of the fingerprint — provenance is metadata
+    # about the numbers, not a number the planner consumes, so tagging a
+    # spec must not invalidate its cached plans.
+    provenance: str = "measured"
 
     def fact(self, key: str, default: Optional[float] = None) -> float:
         if key in self.facts:
@@ -836,6 +843,7 @@ def gh200_like_spec() -> MachineSpec:
         crossover_paths=("gpudirect", "three_step"),
         description="GH200-like tightly-coupled node (representative figures; "
                     "NVLink-C2C host<->device, per-superchip NDR NIC)",
+        provenance="representative",
     )
 
 

@@ -95,6 +95,46 @@ def make_simple(alpha: float, beta: float) -> SimplePostalModel:
     return SimplePostalModel(PostalParams(alpha, beta))
 
 
+@dataclasses.dataclass(frozen=True)
+class ScaledPostalModel:
+    """A base postal model with multiplicative (alpha, beta) degradation.
+
+    The congestion fitter (:mod:`repro.obs.congestion`) expresses a sagging
+    link as scale factors on the healthy model rather than a fresh fit: the
+    protocol segmentation (short/eager/rendezvous thresholds) of the base
+    model is preserved, only the per-segment latency/bandwidth terms move.
+    ``beta_scale > 1`` means the effective bandwidth dropped by that factor.
+    """
+
+    base: "SegmentedPostalModel | SimplePostalModel"
+    alpha_scale: float = 1.0
+    beta_scale: float = 1.0
+
+    def params_for(self, nbytes: float = 0.0) -> PostalParams:
+        p = self.base.params_for(nbytes)
+        return PostalParams(
+            p.alpha * self.alpha_scale, p.beta * self.beta_scale, suspect=p.suspect
+        )
+
+    def time(self, nbytes) -> np.ndarray:
+        s = np.asarray(nbytes, dtype=np.float64)
+        if s.ndim == 0:
+            return np.asarray(self.params_for(float(s)).time(s))
+        out = np.empty_like(s)
+        flat_s = s.ravel()
+        flat_o = out.ravel()
+        for sz in np.unique(flat_s):
+            mask = flat_s == sz
+            flat_o[mask] = self.params_for(float(sz)).time(flat_s[mask])
+        return out
+
+    def alpha(self, nbytes: float = 0.0) -> float:
+        return self.params_for(nbytes).alpha
+
+    def beta(self, nbytes: float = 0.0) -> float:
+        return self.params_for(nbytes).beta
+
+
 def crossover_size(
     m_a: "SegmentedPostalModel | SimplePostalModel",
     m_b: "SegmentedPostalModel | SimplePostalModel",

@@ -27,7 +27,7 @@ from repro.launch.train import build_mesh
 from repro.models import decode as dec
 from repro.models import init_params
 from repro.models.transformer import DistContext
-from repro.obs import metrics, trace
+from repro.obs import drift, health, metrics, trace
 from repro.sharding import specs
 
 
@@ -47,6 +47,24 @@ def main(argv=None):
     ap.add_argument(
         "--metrics-out", default="", metavar="PATH",
         help="write the end-of-run metrics snapshot as JSON",
+    )
+    ap.add_argument(
+        "--health-out", default="", metavar="PATH",
+        help="write the link-health snapshot as JSON "
+             "(inspect with python -m repro.obs.health --load PATH)",
+    )
+    ap.add_argument(
+        "--degrade-at", type=int, default=-1, metavar="STEP",
+        help="inject a synthetic bandwidth sag on --degrade-tier from this "
+             "decode step on (degradation drill for the obs-health smoke)",
+    )
+    ap.add_argument(
+        "--degrade-tier", default="dcn", metavar="TIER",
+        help="tier of the active machine to sag (default: dcn)",
+    )
+    ap.add_argument(
+        "--degrade-factor", type=float, default=10.0,
+        help="measured/predicted ratio of the injected sag",
     )
     args = ap.parse_args(argv)
 
@@ -100,16 +118,43 @@ def main(argv=None):
     # benchmarks/ gates that this stays serving-loop affordable, and the
     # plan_cache.hit/miss counters (see the exit summary) replace the old
     # inline hit/miss print.
-    from repro.comms.autotune import select_allreduce_strategy
+    from repro.comms.autotune import active_machine, select_allreduce_strategy
+    from repro.core.machine import get_machine
 
     plan_shape = dict(mesh.shape)
     token_bytes = float(B * cfg.d_model) * 2  # bf16 activations per token
+    # Degradation drill (--degrade-at): from that decode step on, per-step
+    # link probes of --degrade-tier come back --degrade-factor x slower
+    # than the active machine's model predicts.  The drift records stream
+    # into obs.health; when the link degrades, the loop refits a degraded
+    # variant from the sagged samples and re-registers it — the fingerprint
+    # bump invalidates the plan cache, so the NEXT per-step plan call
+    # re-decides against the degraded reality (DESIGN.md §10).
+    degrade_machine = active_machine()
+    degrade_spec = get_machine(degrade_machine) if args.degrade_at >= 0 else None
+    degrade_probe_bytes = float(1 << 20)
+    degrade_refit_done = False
     out_tokens = []
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     t0 = time.perf_counter()
     for i in range(N):
         with trace.span("decode.step", token=i):
             out_tokens.append(np.asarray(tok)[:, 0])
+            if degrade_spec is not None:
+                tier = degrade_spec.tiers[args.degrade_tier]
+                t_model = float(tier.time(degrade_probe_bytes))
+                sag = args.degrade_factor if i >= args.degrade_at else 1.0
+                drift.record(degrade_machine, args.degrade_tier, "probe",
+                             degrade_probe_bytes, t_model, sag * t_model)
+                lk = health.monitor().link(degrade_machine, args.degrade_tier)
+                if lk.state == health.DEGRADED and not degrade_refit_done:
+                    degrade_refit_done = True
+                    fit, _ = health.refit_degraded(
+                        degrade_spec, lk, register_as=degrade_machine
+                    )
+                    print(f"[serve] link {lk.key} degraded at decode step {i} "
+                          f"(detected in {lk.detection_records} records); "
+                          f"refit beta x{fit.beta_scale:.1f}, replanning")
             with trace.span("plan"):
                 collective = select_allreduce_strategy(
                     plan_shape, token_bytes * (P_len + i + 1)
@@ -148,9 +193,17 @@ def main(argv=None):
     if args.metrics_out:
         metrics.write(args.metrics_out)
         print(f"[serve] metrics written to {args.metrics_out}")
+    if args.health_out:
+        import json
+
+        with open(args.health_out, "w") as f:
+            json.dump(health.monitor().snapshot(), f, indent=2)
+            f.write("\n")
+        print(f"[serve] health written to {args.health_out}")
     print("[serve] metrics:",
           metrics.summary_line(prefixes=["serve.", "plan_cache.",
-                                         "lowering_memo.", "engine."]))
+                                         "lowering_memo.", "engine.",
+                                         "health."]))
     return gen
 
 

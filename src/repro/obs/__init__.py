@@ -26,8 +26,13 @@ import time
 from typing import Callable, Optional
 
 from repro.obs import drift, metrics, trace
+from repro.obs import health  # noqa: E402  (needs drift/metrics/trace bound)
 
-__all__ = ["drift", "metrics", "trace", "observed", "reset_all"]
+# NOTE: repro.obs.congestion is deliberately NOT imported here — it imports
+# the modeling core (core.schedule -> core.events), and core.schedule
+# imports this package for trace/metrics.  health and callers pull it in
+# lazily.
+__all__ = ["drift", "health", "metrics", "trace", "observed", "reset_all"]
 
 
 def _engine_sink(result, stats: dict) -> None:
@@ -91,8 +96,10 @@ def observed(
 
 
 def reset_all() -> None:
-    """Back to cold state: metrics off+empty, tracer stopped, drift empty."""
+    """Back to cold state: metrics off+empty, tracer stopped, drift empty,
+    link-health monitor fresh."""
     metrics.disable()
     metrics.reset()
     trace.stop()
     drift.reset()
+    health.reset()

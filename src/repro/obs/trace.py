@@ -88,6 +88,38 @@ class Tracer:
             ev["args"] = args
         self.events.append(ev)
 
+    # -- wall-clock intervals (async b/e annotations) ------------------------
+
+    def begin_interval(self, name: str, *, cat: str = "health", **args) -> int:
+        """Open a wall-clock annotation interval; returns its id.
+
+        Rendered as a ``b``/``e`` async pair on the wall pid — the health
+        monitor uses these to paint degraded windows across the serve
+        timeline (a span would require strict nesting; degraded intervals
+        overlap plan/decode spans arbitrarily).
+        """
+        iid = self._next_flow_id
+        self._next_flow_id += 1
+        ev = {
+            "ph": "b", "pid": WALL_PID, "tid": 0, "name": name, "cat": cat,
+            "id": iid, "ts": (time.perf_counter() - self.t0) * _US,
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+        return iid
+
+    def end_interval(self, name: str, iid: int, *, cat: str = "health",
+                     **args) -> None:
+        """Close an interval opened by :meth:`begin_interval`."""
+        ev = {
+            "ph": "e", "pid": WALL_PID, "tid": 0, "name": name, "cat": cat,
+            "id": iid, "ts": (time.perf_counter() - self.t0) * _US,
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
     # -- simulated-time schedule timelines ----------------------------------
 
     def record_schedule(self, result, *, include_report: bool = False) -> int:
@@ -172,6 +204,31 @@ def record_schedule(result, *, include_report: bool = False) -> Optional[int]:
     if t is None:
         return None
     return t.record_schedule(result, include_report=include_report)
+
+
+def begin_interval(name: str, *, cat: str = "health", **args) -> Optional[int]:
+    """Open a wall-clock annotation interval (None when tracing is off)."""
+    t = _ACTIVE
+    if t is None:
+        return None
+    return t.begin_interval(name, cat=cat, **args)
+
+
+def end_interval(name: str, iid: Optional[int], *, cat: str = "health",
+                 **args) -> None:
+    """Close an interval; no-op when tracing is off or ``iid`` is None."""
+    t = _ACTIVE
+    if t is None or iid is None:
+        return
+    t.end_interval(name, iid, cat=cat, **args)
+
+
+def instant(name: str, **args) -> None:
+    """Wall-clock instant marker on the active tracer (no-op when off)."""
+    t = _ACTIVE
+    if t is None:
+        return
+    t.instant(name, **args)
 
 
 # -- SimResult -> trace_event conversion ------------------------------------

@@ -1,4 +1,4 @@
-from repro.runtime.straggler import StragglerMonitor, StragglerEvent
+from repro.runtime.straggler import EwmaZScore, StragglerMonitor, StragglerEvent
 from repro.runtime.fault import InjectedFault, LoopState, run_with_recovery
 from repro.runtime.elastic import reshard_tree, restore_on_mesh
 

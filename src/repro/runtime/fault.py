@@ -5,6 +5,14 @@ production: a jax distributed runtime error after a node loss; in tests: an
 injected ``InjectedFault``) it restores the latest complete checkpoint and
 replays — the deterministic data pipeline (data/synthetic.py) makes the
 recovery bitwise-exact, which tests assert.
+
+Observability: when metrics are enabled the loop counts steps, restarts,
+straggler flags and mitigation advisories (``runtime.*``), and the first
+time the straggler monitor's persistent-slowness advisory fires, the loop
+routes a re-plan request through :func:`repro.obs.health.request_replan` —
+a persistently slow participant means the current schedule's cost
+assumptions are stale, so cached plans are dropped and the next planner
+call re-decides (the same trigger a degraded link uses; DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -50,9 +58,16 @@ def run_with_recovery(
         start = latest
         log(f"resumed from step {latest}")
 
+    # lazy: repro.obs is import-light, but keeping runtime importable
+    # without it at module scope preserves the layering (obs.health pulls
+    # the shared detector out of this package lazily, in the other
+    # direction)
+    from repro.obs import metrics as obs_metrics
+
     restarts = 0
     step = start
     metrics = {}
+    mitigation_requested = False
     while step < total_steps:
         try:
             if fault_hook is not None:
@@ -61,10 +76,27 @@ def run_with_recovery(
             batch = batch_fn(step)
             params, opt, metrics = step_fn(params, opt, batch)
             dt = time.perf_counter() - t0
+            if obs_metrics._ENABLED:
+                obs_metrics.inc("runtime.steps")
             if monitor is not None:
                 ev = monitor.record(step, dt)
                 if ev is not None:
                     log(f"straggler flag at step {step}: {dt:.3f}s (z={ev.zscore:.1f})")
+                    if obs_metrics._ENABLED:
+                        obs_metrics.inc("runtime.straggler.flags")
+                if monitor.should_mitigate and not mitigation_requested:
+                    # persistent slowness: advise checkpoint + re-plan once
+                    # per episode (the advisory stays up until a normal
+                    # step resets the streak)
+                    mitigation_requested = True
+                    if obs_metrics._ENABLED:
+                        obs_metrics.inc("runtime.straggler.mitigate")
+                    from repro.obs import health as obs_health
+
+                    obs_health.request_replan(reason="straggler")
+                    log(f"straggler mitigation advised at step {step}")
+                elif not monitor.should_mitigate:
+                    mitigation_requested = False
             step += 1
             if step % checkpoint_every == 0 or step == total_steps:
                 checkpointer.save(step, {"params": params, "opt": opt}, block=False)
@@ -72,6 +104,8 @@ def run_with_recovery(
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if obs_metrics._ENABLED:
+                obs_metrics.inc("runtime.restarts")
             checkpointer.wait()
             latest = checkpointer.latest_step()
             log(f"fault at step {step} ({e}); restarting from {latest}")

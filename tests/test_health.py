@@ -1,0 +1,538 @@
+"""Link-health observatory: detector sharing, state machine, re-planning.
+
+The load-bearing pins:
+
+* :class:`repro.runtime.straggler.EwmaZScore` is ONE implementation used by
+  both the step-time straggler monitor and the link-health ratio detector —
+  parity and warm-up semantics are pinned here so neither caller can drift.
+* The per-link state machine only takes legal transitions, counts them in
+  metrics, and paints degraded intervals onto an active trace.
+* The re-plan contract: a fitted degraded-variant spec has a different
+  fingerprint, and *registering* it is sufficient to invalidate the plan
+  cache — no explicit cache flush anywhere in the trigger path.
+* ``degradation_drill`` end to end: sag -> bounded detection -> refit ->
+  re-registered spec -> the re-planned schedule strictly beats the stale
+  pick under the degraded reality.
+* The contention calibration recovers a known engine capacity from
+  measurements synthesized by the engine itself (round-trip).
+* The runtime loop feeds the obs counters and routes straggler mitigation
+  through :func:`repro.obs.health.request_replan`.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.machine import get_machine, register_machine, _REGISTRY
+from repro.core.postal import ScaledPostalModel
+from repro.obs import congestion, drift, health, metrics, trace
+from repro.runtime.straggler import EwmaZScore, StragglerMonitor
+
+
+@pytest.fixture(autouse=True)
+def _scratch_registry():
+    """Drop any scratch machines a test registers (the builtin registry is
+    process-global; a leaked degraded drill spec would poison later tests
+    that sweep all machines)."""
+    before = set(_REGISTRY)
+    yield
+    for name in set(_REGISTRY) - before:
+        del _REGISTRY[name]
+
+
+# --------------------------------------------------------------------------
+# Shared detector.
+# --------------------------------------------------------------------------
+
+def test_ewma_detector_matches_straggler_monitor():
+    """Driving EwmaZScore the way StragglerMonitor does reproduces the
+    monitor's flags exactly — one implementation, two callers."""
+    series = [0.1 + 0.001 * (i % 3) for i in range(20)] + [1.5, 1.5, 0.1, 1.5]
+    mon = StragglerMonitor(warmup_steps=3)
+    det = EwmaZScore(alpha=0.1, z_threshold=3.0, warmup=3)
+    for i, v in enumerate(series):
+        ev = mon.record(i, v)
+        if det.ewma is None:
+            det.note_normal(v)
+            flagged = False
+        elif det.is_anomalous(v):
+            det.note_anomaly()
+            flagged = True
+        else:
+            det.note_normal(v)
+            flagged = False
+        assert flagged == (ev is not None), (i, v)
+        assert det.consecutive == mon.consecutive_slow
+        assert det.ewma == mon.ewma
+
+
+def test_ewma_detector_warmup_and_outlier_exclusion():
+    det = EwmaZScore(alpha=0.1, z_threshold=3.0, warmup=3)
+    # constant series: zero variance, z stays 0, never anomalous
+    for v in (1.0, 1.0, 1.0, 1.0, 1.0):
+        assert not det.is_anomalous(v)
+        det.update(v)
+    assert det.consecutive == 0
+    # spike after warm-up with nonzero variance
+    for v in (1.01, 0.99, 1.01, 0.99):
+        det.update(v)
+    baseline = det.ewma
+    assert det.is_anomalous(50.0)
+    det.update(50.0)
+    assert det.consecutive == 1
+    # excluded from the EWMA: the baseline did not move
+    assert det.ewma == baseline
+    det.update(1.0)
+    assert det.consecutive == 0
+
+
+# --------------------------------------------------------------------------
+# Drift ledger satellites: eviction accounting + size-bucket breakdown.
+# --------------------------------------------------------------------------
+
+def test_drift_eviction_counter():
+    drift.reset()
+    cap = drift._MAX_RECORDS
+    for i in range(cap + 7):
+        drift.record("m", "t", "c", 1024.0, 1.0, 1.0)
+    assert len(drift.records()) == cap
+    assert drift.n_evicted() == 7
+    assert drift.summary()["n_evicted"] == 7
+    drift.reset()
+    assert drift.n_evicted() == 0
+
+
+def test_drift_summary_log2_buckets():
+    drift.reset()
+    # two size decades on one tier, distinguishable errors
+    drift.record("m", "net", "c", float(1 << 10), 1.0, 1.0)    # exact
+    drift.record("m", "net", "c", float(1 << 10), 1.0, 1.1)    # +10%
+    drift.record("m", "net", "c", float(1 << 20), 1.0, 2.0)    # +100%
+    tiers = drift.summary(tol=0.25)["tiers"]
+    buckets = tiers["m/net"]["by_log2_nbytes"]
+    assert set(buckets) == {"10", "20"}
+    assert buckets["10"]["n"] == 2
+    assert buckets["10"]["within_tol"] == 1.0
+    assert buckets["20"]["n"] == 1
+    assert buckets["20"]["within_tol"] == 0.0
+    # rel error is (predicted - measured) / measured: (1 - 2) / 2
+    assert buckets["20"]["max_abs_rel_error"] == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------
+# State machine.
+# --------------------------------------------------------------------------
+
+def _feed(mon, n, ratio, machine="m", tier="net", nbytes=1024.0):
+    for _ in range(n):
+        drift.record(machine, tier, "probe", nbytes, 1.0, ratio)
+    return mon.link(machine, tier)
+
+
+def test_health_state_machine_full_cycle_and_metrics():
+    mon = health.reset()
+    saved = metrics.swap_registry()
+    metrics.enable()
+    try:
+        lk = _feed(mon, 3, 1.0)           # warm-up
+        assert lk.state == health.HEALTHY
+        _feed(mon, 1, 10.0)
+        assert lk.state == health.HEALTHY  # one anomaly is not a streak
+        _feed(mon, 1, 10.0)
+        assert lk.state == health.SUSPECT  # suspect_after=2
+        _feed(mon, 1, 10.0)
+        assert lk.state == health.DEGRADED  # degrade_after=3
+        assert lk.detection_records == 3
+        _feed(mon, 3, 1.0)                 # recover_after=3 normals
+        assert lk.state == health.RECOVERED
+        _feed(mon, 6, 1.0)                 # 2*recover_after more normals
+        assert lk.state == health.HEALTHY
+        c = metrics.to_json()["counters"]
+        for k in ("healthy_to_suspect", "suspect_to_degraded",
+                  "degraded_to_recovered", "recovered_to_healthy"):
+            assert c[f"health.transition.{k}"] == 1.0, c
+        assert mon.n_transitions == 4
+    finally:
+        metrics.swap_registry(saved)
+        metrics.disable()
+    health.reset()
+
+
+def test_health_suspect_clears_on_single_normal():
+    mon = health.reset()
+    lk = _feed(mon, 3, 1.0)
+    _feed(mon, 2, 10.0)
+    assert lk.state == health.SUSPECT
+    _feed(mon, 1, 1.0)
+    assert lk.state == health.HEALTHY
+    assert lk.detection_records is None  # never reached degraded
+    health.reset()
+
+
+def test_health_transitions_are_legal_and_observed():
+    mon = health.reset()
+    seen = []
+    mon.on_transition(lambda lk, old, new: seen.append((old, new)))
+    _feed(mon, 3, 1.0)
+    _feed(mon, 3, 10.0)
+    _feed(mon, 3, 1.0)
+    for old, new in seen:
+        assert new in health.TRANSITIONS[old], (old, new)
+    assert seen[0] == (health.HEALTHY, health.SUSPECT)
+    assert seen[-1] == (health.DEGRADED, health.RECOVERED)
+    health.reset()
+
+
+def test_degraded_interval_painted_on_trace():
+    mon = health.reset()
+    tracer = trace.start(name="t", record_schedules=False)
+    try:
+        _feed(mon, 3, 1.0)
+        _feed(mon, 3, 10.0)   # -> degraded: interval opens
+        _feed(mon, 3, 1.0)    # -> recovered: interval closes
+    finally:
+        trace.stop()
+    begins = [e for e in tracer.events
+              if e.get("ph") == "b" and e["name"] == "degraded:m/net"]
+    ends = [e for e in tracer.events
+            if e.get("ph") == "e" and e["name"] == "degraded:m/net"]
+    assert len(begins) == 1 and len(ends) == 1
+    assert begins[0]["id"] == ends[0]["id"]
+    assert begins[0]["ts"] <= ends[0]["ts"]
+    health.reset()
+
+
+def test_snapshot_roundtrips_through_json():
+    mon = health.reset()
+    _feed(mon, 3, 1.0)
+    _feed(mon, 3, 10.0)
+    snap = json.loads(json.dumps(mon.snapshot()))
+    assert snap["links"]["m/net"]["state"] == health.DEGRADED
+    assert snap["links"]["m/net"]["detection_records"] == 3
+    assert snap["state_counts"] == {health.DEGRADED: 1}
+    assert snap["drift"]["n_records"] == 6
+    health.reset()
+
+
+# --------------------------------------------------------------------------
+# Congestion: degraded-tier fitting + the fingerprint/plan-cache contract.
+# --------------------------------------------------------------------------
+
+def test_scaled_postal_model_scales_params_and_time():
+    tier = get_machine("summit").tiers["gpu_net:off-node"]
+    scaled = ScaledPostalModel(base=tier.model, alpha_scale=2.0, beta_scale=3.0)
+    for s in (1024.0, float(1 << 20)):
+        p0 = tier.model.params_for(s)
+        p1 = scaled.params_for(s)
+        assert p1.alpha == pytest.approx(2.0 * p0.alpha)
+        assert p1.beta == pytest.approx(3.0 * p0.beta)
+        assert float(scaled.time(s)) == pytest.approx(
+            2.0 * p0.alpha + 3.0 * p0.beta * s
+        )
+    # vectorized path agrees with scalar path
+    sizes = np.array([1024.0, 4096.0, float(1 << 20)])
+    np.testing.assert_allclose(
+        scaled.time(sizes), [float(scaled.time(float(s))) for s in sizes]
+    )
+
+
+def test_fit_degraded_tier_recovers_known_sag():
+    spec = get_machine("summit")
+    tier = spec.tiers["gpu_net:off-node"]
+    sizes = [float(1 << p) for p in (12, 14, 16, 18, 20)]
+    times = [float(tier.time(s)) * 7.0 for s in sizes]  # pure 7x sag
+    fit = congestion.fit_degraded_tier(spec, "gpu_net:off-node", sizes, times)
+    assert fit.alpha_scale == pytest.approx(7.0, rel=1e-6)
+    assert fit.beta_scale == pytest.approx(7.0, rel=1e-6)
+    assert fit.max_rel_err < 1e-9
+    assert fit.n_samples == 5
+
+
+def test_apply_degradation_changes_fingerprint_only_when_scaled():
+    spec = get_machine("summit")
+    fit = congestion.DegradedFit(
+        tier="gpu_net:off-node", alpha_scale=1.0, beta_scale=5.0,
+        n_samples=4, max_rel_err=0.0,
+    )
+    degraded = congestion.apply_degradation(spec, {"gpu_net:off-node": fit})
+    assert degraded.fingerprint != spec.fingerprint
+    assert degraded.provenance == "fitted"
+    # unaffected tiers share the base models verbatim
+    assert degraded.tiers["cpu_net:off-node"] is spec.tiers["cpu_net:off-node"]
+    # identity fit -> same tier objects -> same fingerprint
+    noop = congestion.DegradedFit(
+        tier="gpu_net:off-node", alpha_scale=1.0, beta_scale=1.0,
+        n_samples=4, max_rel_err=0.0,
+    )
+    same = congestion.apply_degradation(spec, {"gpu_net:off-node": noop})
+    assert same.fingerprint == spec.fingerprint
+
+
+def test_registering_degraded_spec_invalidates_plan_cache():
+    """The re-plan trigger: registration alone (fingerprint bump) makes the
+    next select a miss — no explicit clear anywhere."""
+    from repro.comms.autotune import plan_cache_info, select_schedule
+
+    spec = get_machine("summit")
+    register_machine("t_replan", spec)
+    select_schedule("t_replan", float(1 << 16), 8)
+    select_schedule("t_replan", float(1 << 16), 8)
+    info = plan_cache_info()
+    assert info["hits"] >= 1
+    fit = congestion.fit_degraded_tier(
+        spec, "gpu_net:off-node",
+        [float(1 << 16)], [float(spec.tiers["gpu_net:off-node"].time(1 << 16)) * 8],
+    )
+    congestion.apply_degradation(
+        spec, {"gpu_net:off-node": fit}, register_as="t_replan"
+    )
+    misses_before = plan_cache_info()["misses"]
+    select_schedule("t_replan", float(1 << 16), 8)
+    assert plan_cache_info()["misses"] == misses_before + 1
+
+
+def test_fit_contention_roundtrips_engine_capacity():
+    """Synthesize the 'measurement' from the engine at a known capacity and
+    bandwidth sag; the fit must recover both."""
+    spec = get_machine("summit")
+    tier = "gpu_net:off-node"
+    nbytes = float(1 << 22)
+    lanes = (1, 2, 4, 8)
+    true_cap, true_scale = 2, 1.7
+    measured = [
+        congestion.predict_concurrent(
+            spec, tier, nbytes, k, capacity=true_cap, beta_scale=true_scale,
+        )
+        for k in lanes
+    ]
+    drift.reset()
+    fit = congestion.fit_contention(spec, tier, nbytes, lanes, measured)
+    assert fit.capacity == true_cap
+    assert fit.mean_rel_err < 0.05
+    assert fit.capacity_overrides == {f"{tier}.pool": true_cap}
+    recs = [r for r in drift.records() if r.collective == "contention"]
+    assert len(recs) == len(lanes)
+
+
+def test_predict_concurrent_queues_beyond_capacity():
+    spec = get_machine("summit")
+    tier = "gpu_net:off-node"
+    nbytes = float(1 << 20)
+    t1 = congestion.predict_concurrent(spec, tier, nbytes, 1, capacity=2)
+    t2 = congestion.predict_concurrent(spec, tier, nbytes, 2, capacity=2)
+    t4 = congestion.predict_concurrent(spec, tier, nbytes, 4, capacity=2)
+    assert t2 == pytest.approx(t1)      # both fit in capacity
+    assert t4 == pytest.approx(2 * t1)  # two waves
+
+
+# --------------------------------------------------------------------------
+# End to end: the degradation drill.
+# --------------------------------------------------------------------------
+
+def test_degradation_drill_end_to_end():
+    health.reset()
+    res = health.degradation_drill(machine="t_drill")
+    assert res["detected"]
+    assert res["state"] == health.DEGRADED
+    assert res["detection_records"] is not None
+    assert res["detection_records"] <= 8
+    assert res["fingerprint_changed"]
+    # registration alone invalidated the cache: the fresh pick was a miss
+    assert res["plan_cache_misses_after"] > res["plan_cache_misses_before"]
+    assert res["replanned"]
+    assert res["replanned_beats_stale"]
+    assert res["t_fresh_under_degraded"] < res["t_stale_under_degraded"]
+    assert res["speedup"] > 1.0
+    # the fit saw the sag, not the healthy warm-up (the single-size samples
+    # underdetermine the alpha/beta split, so the split scales are not
+    # individually pinned — but the combined sag magnitude must be there)
+    assert res["fit_beta_scale"] > res["sag"] / 2
+    assert res["fit_max_rel_err"] < 1e-6
+    health.reset()
+
+
+def test_refit_degraded_uses_anomalous_samples():
+    """Healthy warm-up samples must not dilute the refit."""
+    mon = health.reset()
+    spec = get_machine("summit")
+    tier_key = "gpu_net:off-node"
+    nbytes = float(1 << 16)
+    t_model = float(spec.tiers[tier_key].time(nbytes))
+    for _ in range(5):
+        drift.record("m", tier_key, "probe", nbytes, t_model, t_model)
+    for _ in range(4):
+        drift.record("m", tier_key, "probe", nbytes, t_model, 10.0 * t_model)
+    lk = mon.link("m", tier_key)
+    assert lk.state == health.DEGRADED
+    fit, degraded = health.refit_degraded(spec, lk)
+    # the refit explains the SAGGED samples exactly (healthy warm-up samples
+    # would make that impossible: one model can't hit both 1x and 10x)
+    assert fit.max_rel_err < 1e-6
+    t_deg = float(degraded.tiers[tier_key].time(nbytes))
+    assert t_deg == pytest.approx(10.0 * t_model, rel=1e-6)
+    assert degraded.fingerprint != spec.fingerprint
+    health.reset()
+
+
+def test_request_replan_without_spec_drops_cache_and_counts():
+    from repro.comms.autotune import plan_cache_info, select_schedule
+
+    mon = health.reset()
+    saved = metrics.swap_registry()
+    metrics.enable()
+    try:
+        select_schedule("summit", float(1 << 16), 8)
+        health.request_replan(reason="straggler")
+        misses = plan_cache_info()["misses"]
+        select_schedule("summit", float(1 << 16), 8)
+        assert plan_cache_info()["misses"] == misses + 1
+        c = metrics.to_json()["counters"]
+        assert c["health.replans"] == 1.0
+        assert c["health.replan.straggler"] == 1.0
+        assert mon.replans[0]["reason"] == "straggler"
+        assert mon.replans[0]["refit"] is False
+    finally:
+        metrics.swap_registry(saved)
+        metrics.disable()
+    health.reset()
+
+
+# --------------------------------------------------------------------------
+# Locality-split fitting from placed pairs.
+# --------------------------------------------------------------------------
+
+def test_spec_from_measurements_placed_pairs_fits_locality_tiers():
+    from repro.core.benchmark import spec_from_measurements
+
+    sizes = [float(1 << p) for p in range(10, 21, 2)]
+
+    def synth(alpha, beta):
+        return (sizes, [alpha + beta * s for s in sizes])
+
+    drift.reset()
+    spec = spec_from_measurements(
+        "t_placed", synth(5e-6, 2e-9),
+        placed_pairs={
+            "on-socket": synth(1e-6, 5e-10),
+            "on-node": synth(2e-6, 1e-9),
+            "off-node": synth(5e-6, 2e-9),
+        },
+        register=False,
+    )
+    for loc in ("on-socket", "on-node", "off-node"):
+        assert f"gpu_net:{loc}" in spec.tiers
+    # the fitted locality models order correctly at a probe size
+    s = float(1 << 18)
+    t_sock = float(spec.tiers["gpu_net:on-socket"].time(s))
+    t_node = float(spec.tiers["gpu_net:on-node"].time(s))
+    t_off = float(spec.tiers["gpu_net:off-node"].time(s))
+    assert t_sock < t_node < t_off
+    assert spec.provenance == "fitted"
+    # each locality tier produced drift records against its own samples
+    tiers_seen = {r.tier for r in drift.records()}
+    assert {"gpu_net:on-socket", "gpu_net:on-node",
+            "gpu_net:off-node"} <= tiers_seen
+
+
+def test_lint_flags_non_measured_provenance():
+    from repro.analysis.specs import lint_spec
+
+    gh = get_machine("gh200")
+    assert gh.provenance == "representative"
+    kinds = {f.check for f in lint_spec(gh)}
+    assert "spec.provenance" in kinds
+    summit = get_machine("summit")
+    assert summit.provenance == "measured"
+    assert "spec.provenance" not in {f.check for f in lint_spec(summit)}
+
+
+# --------------------------------------------------------------------------
+# CLI.
+# --------------------------------------------------------------------------
+
+def test_health_cli_json_roundtrip(capsys, tmp_path):
+    mon = health.reset()
+    _feed(mon, 3, 1.0)
+    _feed(mon, 3, 10.0)
+    assert health.main(["--json"]) == 0
+    snap = json.loads(capsys.readouterr().out)
+    assert snap["links"]["m/net"]["state"] == health.DEGRADED
+    # --out writes the same snapshot; --load reads it back
+    out = tmp_path / "health.json"
+    assert health.main(["--out", str(out)]) == 0
+    capsys.readouterr()
+    assert health.main(["--load", str(out), "--json"]) == 0
+    reloaded = json.loads(capsys.readouterr().out)
+    assert reloaded["links"] == snap["links"]
+    health.reset()
+
+
+def test_health_cli_drill_reports_and_exits_zero(capsys):
+    health.reset()
+    assert health.main(["--drill"]) == 0
+    out = capsys.readouterr().out
+    assert "drill: detected=True" in out
+    assert "OK" in out
+    health.reset()
+
+
+# --------------------------------------------------------------------------
+# Runtime loop -> obs counters -> re-plan routing (satellite: fault/straggler).
+# --------------------------------------------------------------------------
+
+def _slow_then_fast_step(params, opt, batch):
+    return params, opt, {}
+
+
+def test_run_with_recovery_feeds_obs_and_routes_straggler_replan(tmp_path):
+    import time as _time
+
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.runtime.fault import InjectedFault, run_with_recovery
+
+    mon = health.reset()
+    saved = metrics.swap_registry()
+    metrics.enable()
+
+    slow = {6, 7, 8, 9}
+
+    def step_fn(params, opt, batch):
+        if batch["step"] in slow:
+            _time.sleep(0.03)
+        else:
+            _time.sleep(0.001)
+        return params, opt, {}
+
+    faults = {3}
+
+    def hook(step):
+        if step in faults:
+            faults.remove(step)
+            raise InjectedFault("boom")
+
+    smon = StragglerMonitor(warmup_steps=3, consecutive_for_action=2)
+    try:
+        state = run_with_recovery(
+            step_fn=step_fn,
+            batch_fn=lambda step: {"step": step},
+            init_params={}, init_opt={},
+            checkpointer=Checkpointer(str(tmp_path)),
+            total_steps=12, checkpoint_every=4,
+            fault_hook=hook, monitor=smon,
+        )
+        assert state.step == 12
+        c = metrics.to_json()["counters"]
+        assert c["runtime.restarts"] == 1.0
+        assert c["runtime.steps"] >= 12.0
+        assert c["runtime.straggler.flags"] >= 1.0
+        assert c["runtime.straggler.mitigate"] == 1.0
+        # the mitigation advisory routed through the shared re-plan trigger
+        assert c["health.replans"] == 1.0
+        assert c["health.replan.straggler"] == 1.0
+        assert [r["reason"] for r in mon.replans] == ["straggler"]
+    finally:
+        metrics.swap_registry(saved)
+        metrics.disable()
+    health.reset()
