@@ -294,4 +294,65 @@ def congestion_calibration() -> bool:
     return ok
 
 
-ALL = [model_drift, metrics_health, link_health, congestion_calibration]
+def elasticity() -> bool:
+    print("# elasticity: host drop -> restore -> shrink -> re-plan beats stale")
+    from repro.runtime.elastic import host_drop_drill
+
+    health.reset()
+    was_enabled = metrics.enabled()
+    saved = metrics.swap_registry()
+    metrics.enable()
+    try:
+        res = host_drop_drill(machine="bench_elastic_drill")
+        counters = metrics.to_json()["counters"]
+    finally:
+        metrics.swap_registry(saved)
+        if not was_enabled:
+            metrics.disable()
+    checks = {
+        "survived": res["survived"],
+        "loss_continuity": res["loss_continuity"],
+        "fingerprint_changed": res["fingerprint_changed"],
+        "pick_changed": res["pick_changed"],
+        "replanned_beats_stale": res["replanned_beats_stale"],
+        "reshape_counters": (
+            counters.get("runtime.elastic.host_drops", 0)
+            == len(res["reshapes"])
+            and counters.get("runtime.elastic.reshapes", 0)
+            == len(res["reshapes"])
+            and counters.get("health.replan.host_drop", 0)
+            == len(res["reshapes"])
+        ),
+        "des_overrides": res["des_overrides"] > 0,
+    }
+    ok = all(checks.values())
+    print(f"elasticity,{res['base_machine']},"
+          f"ranks={res['total_ranks']}->{res['survivors']},"
+          f"drops={len(res['reshapes'])},"
+          f"{res['stale_pick']}->{res['fresh_pick']},"
+          f"t_stale={res['t_stale_on_shrunk']:.3e},"
+          f"t_fresh={res['t_fresh_on_shrunk']:.3e},"
+          f"speedup=x{res['speedup']:.2f},"
+          f"continuity={res['loss_continuity']}"
+          + ("" if ok else ",FAIL:"
+             + ";".join(k for k, v in checks.items() if not v)))
+    elasticity.last_values = {
+        **{k: res[k] for k in (
+            "base_machine", "total_ranks", "survivors", "fingerprint_changed",
+            "plan_cache_misses", "stale_pick", "fresh_pick", "pick_changed",
+            "t_stale_on_shrunk", "t_fresh_on_shrunk", "replanned_beats_stale",
+            "speedup", "des_overrides", "completed_steps", "survived",
+            "loss_continuity",
+        )},
+        "n_drops": len(res["reshapes"]),
+        "checks": checks,
+        "runtime_counters": {
+            k: v for k, v in counters.items() if k.startswith("runtime.")
+        },
+    }
+    health.reset()
+    return ok
+
+
+ALL = [model_drift, metrics_health, link_health, congestion_calibration,
+       elasticity]

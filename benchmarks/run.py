@@ -121,6 +121,11 @@ def print_history(history_dir: str) -> int:
             lambda r: r["congestion"]["capacity"])))
         print("  congest   mean_rel_err             " + fmt(series(
             lambda r: round(r["congestion"]["mean_rel_err"], 3))))
+    if any("elasticity" in r for _, r in reports):
+        print("  elastic   survivors                " + fmt(series(
+            lambda r: r["elasticity"]["survivors"])))
+        print("  elastic   replan_speedup           " + fmt(series(
+            lambda r: round(r["elasticity"]["speedup"], 2))))
     fails = series(
         lambda r: sorted(k for k, v in r.get("sections", {}).items() if not v)
     )
@@ -241,6 +246,26 @@ def compare_reports(new: dict, ref: dict) -> list:
     # timing is host noise; the agreement numbers ride in the report)
     if ref.get("congestion") and not new.get("congestion"):
         drift.append("congestion calibration section disappeared")
+    # elasticity: the host-drop drill is deterministic end to end (seeded
+    # scenario, seeded toy training, event-engine judgments), so every
+    # decision clause gates hard: surviving the drop, bitwise loss
+    # continuity across the reshape, the fingerprint bump, and the fresh
+    # plan beating the stale one on the shrunk mesh.
+    ref_el = ref.get("elasticity", {})
+    new_el = new.get("elasticity", {})
+    if ref_el:
+        if not new_el:
+            drift.append("elasticity section disappeared")
+        else:
+            for key in ("survived", "loss_continuity", "fingerprint_changed",
+                        "pick_changed", "replanned_beats_stale"):
+                if ref_el.get(key) and not new_el.get(key):
+                    drift.append(f"elasticity {key!r} regressed: "
+                                 f"True -> {new_el.get(key)!r}")
+            for key in ("stale_pick", "fresh_pick", "survivors"):
+                if key in ref_el and new_el.get(key) != ref_el[key]:
+                    drift.append(f"elasticity {key!r} drifted: "
+                                 f"{ref_el[key]!r} -> {new_el.get(key)!r}")
     return drift
 
 
@@ -343,6 +368,7 @@ def main(argv=None) -> None:
         "metrics_health": getattr(
             observability.metrics_health, "last_values", {}),
         "link_health": getattr(observability.link_health, "last_values", {}),
+        "elasticity": getattr(observability.elasticity, "last_values", {}),
         "congestion": getattr(
             observability.congestion_calibration, "last_values", {}),
         "metrics": obs_metrics.to_json(),

@@ -19,6 +19,13 @@ lints on top — the checks that need judgment rather than arithmetic:
   :func:`repro.core.benchmark.spec_from_measurements`, the fitted model
   should reproduce the measurements it was fitted to; large relative
   residuals mean the segment layout missed a protocol boundary.
+* **shape consistency** (error) — tier lane widths must agree with the
+  shape facts that derived them (``gpus_per_node`` ↔ ``gpu_net`` width,
+  ``hosts_per_pod`` ↔ ``dcn`` width), and a derived spec
+  (:func:`repro.core.machine.shrink_spec` output, health refits) must keep
+  its provenance lineage and carry mutually consistent ``n_gpus``/``ppn``
+  facts — a shrunk spec whose facts disagree with its widths would plan
+  for a mesh that doesn't exist.
 """
 from __future__ import annotations
 
@@ -142,6 +149,69 @@ def lint_spec(spec: MachineSpec) -> List[Finding]:
                     + ("" if sev == ERROR else
                        " — verbatim table quirk, not gating"),
                     resource=f"{base}:{far}",
+                ))
+
+    out.extend(_lint_shape_consistency(spec))
+    return out
+
+
+# tier families whose lane width is derived from a shape fact; every
+# builtin + fitted spec satisfies these, so a mismatch is a real error
+# (most likely a hand-rolled "shrunk" spec that edited one side only)
+_WIDTH_FACTS = (("gpu_net", "gpus_per_node"), ("dcn", "hosts_per_pod"))
+
+
+def _lint_shape_consistency(spec: MachineSpec) -> List[Finding]:
+    out: List[Finding] = []
+    sub = spec.name
+    for base, fact in _WIDTH_FACTS:
+        if fact not in spec.facts:
+            continue
+        want = int(spec.facts[fact])
+        for key, tier in spec.tiers.items():
+            if key.partition(":")[0] != base:
+                continue
+            if tier.width != want:
+                out.append(Finding(
+                    "spec.width_fact_mismatch", ERROR, sub,
+                    f"tier {key!r}: width {tier.width} != fact "
+                    f"{fact}={want} — lane count and shape fact disagree; "
+                    f"schedules would fan out over lanes that don't exist",
+                    resource=key,
+                ))
+
+    if spec.derived_from is not None:
+        if not spec.provenance:
+            out.append(Finding(
+                "spec.derived_provenance", ERROR, sub,
+                f"derived from {spec.derived_from!r} but provenance is "
+                f"empty — derivation must inherit where the constants "
+                f"came from",
+            ))
+        missing = [k for k in ("n_gpus", "ppn") if k not in spec.facts]
+        if missing:
+            out.append(Finding(
+                "spec.derived_facts", ERROR, sub,
+                f"derived from {spec.derived_from!r} but lacks fact(s) "
+                f"{missing} — elastic planning needs the surviving "
+                f"participant count (shrink_spec records both)",
+            ))
+        else:
+            n_gpus = int(spec.facts["n_gpus"])
+            ppn = int(spec.facts["ppn"])
+            inj = int(spec.facts.get("injectors_per_node", ppn))
+            if not (n_gpus >= 1 and 1 <= ppn <= max(n_gpus, 1)):
+                out.append(Finding(
+                    "spec.derived_facts", ERROR, sub,
+                    f"derived facts inconsistent: n_gpus={n_gpus}, "
+                    f"ppn={ppn} (need n_gpus >= 1 and 1 <= ppn <= n_gpus)",
+                ))
+            elif ppn != inj:
+                out.append(Finding(
+                    "spec.derived_facts", ERROR, sub,
+                    f"derived fact ppn={ppn} != injectors_per_node={inj} "
+                    f"— injection caps would be priced for a different "
+                    f"per-node injector count than the mesh runs",
                 ))
     return out
 

@@ -212,6 +212,12 @@ def select_schedule(
     schedules the closed forms cannot express compete on equal footing.
     Names are ``strategy:<declared>`` or a library schedule name."""
     spec = _resolve(machine)
+    if peers is None and "n_gpus" in spec.facts:
+        # elastic/derived specs (core.machine.shrink_spec) record the
+        # surviving participant count as a fact; defaulting peers to it
+        # means a re-registered shrunk spec is re-planned at the mesh size
+        # that actually survives, not at the caller's stale default
+        peers = int(spec.facts["n_gpus"])
     key = ("schedule", spec.fingerprint, _bucket(nbytes_per_msg),
            int(n_msgs), split_messages, peers)
 

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
-from typing import Callable, Dict, Mapping, Optional, Tuple, Union
+from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
@@ -186,6 +186,10 @@ class MachineSpec:
     # about the numbers, not a number the planner consumes, so tagging a
     # spec must not invalidate its cached plans.
     provenance: str = "measured"
+    # name of the spec this one was derived from (shrink_spec, health
+    # refits); like provenance it is lineage metadata, excluded from the
+    # fingerprint — the *derived facts/widths* are what change plans.
+    derived_from: Optional[str] = None
 
     def fact(self, key: str, default: Optional[float] = None) -> float:
         if key in self.facts:
@@ -515,6 +519,112 @@ def validate_spec(spec: MachineSpec) -> None:
                         f"at {s:.0f} bytes must be finite and >= 0 "
                         f"(seconds resp. seconds/byte)"
                     )
+
+
+# --------------------------------------------------------------------------
+# Elastic reshape: derive the surviving-mesh spec after host loss.
+# --------------------------------------------------------------------------
+
+def shrink_spec(
+    spec: MachineSpec,
+    lost_hosts: Union[int, Iterable[int]],
+    *,
+    total_ranks: Optional[int] = None,
+    name: Optional[str] = None,
+) -> MachineSpec:
+    """Derive the MachineSpec for the mesh that survives losing hosts.
+
+    ``lost_hosts`` is a count or an iterable of rank indices.  The derived
+    spec records the surviving participant count as fact ``n_gpus`` and the
+    per-node injector count as fact ``ppn``; when the job fit on a single
+    node/pod, the node shape itself (``gpus_per_node`` / ``hosts_per_pod``
+    and the matching tier widths) shrinks too.  Because ``facts`` are part
+    of :attr:`MachineSpec.fingerprint`, re-registering the shrunk spec
+    under the old name bumps the registry generation *and* misses every
+    cached plan — the exact PR-7 re-plan contract, now triggered by loss
+    instead of link drift (DESIGN.md §11).  ``provenance`` is inherited
+    (the tier constants are still the measured/fitted ones); lineage is
+    recorded in ``derived_from``, which — like provenance — stays out of
+    the fingerprint.
+
+    ``total_ranks`` overrides the pre-loss participant count when the job
+    spans more ranks than one node's worth (the common multi-node case);
+    it defaults to fact ``n_gpus`` if present, else one node/pod's width.
+    """
+    if isinstance(lost_hosts, (int, np.integer)):
+        k = int(lost_hosts)
+    else:
+        lost = sorted({int(h) for h in lost_hosts})
+        if any(h < 0 for h in lost):
+            raise ValueError(f"negative rank in lost_hosts: {lost}")
+        k = len(lost)
+    if k < 0:
+        raise ValueError(f"lost_hosts count {k} must be >= 0")
+
+    facts = dict(spec.facts)
+    tiers = dict(spec.tiers)
+
+    def _shrink_widths(old_w: int, new_w: int, tier_base: str) -> None:
+        for key, tier in list(tiers.items()):
+            if key.partition(":")[0] == tier_base and tier.width == old_w:
+                tiers[key] = dataclasses.replace(tier, width=new_w)
+
+    if "gpus_per_node" in facts:  # GPU family (summit/lassen/gh200/fitted)
+        per_node = int(facts["gpus_per_node"])
+        total = int(total_ranks if total_ranks is not None
+                    else facts.get("n_gpus", per_node))
+        survivors = total - k
+        if survivors < 1:
+            raise ValueError(
+                f"shrink_spec({spec.name!r}): {k} lost of {total} ranks "
+                f"leaves {survivors} < 1 survivor"
+            )
+        if total <= per_node:
+            # single-node job: the node itself lost GPUs, so per-node
+            # shape and the gpu_net lane widths shrink with it
+            cores_per_gpu = int(facts.get("cores_per_gpu", 1))
+            facts["gpus_per_node"] = survivors
+            facts["cpu_cores_per_node"] = cores_per_gpu * survivors
+            if int(facts.get("injectors_per_node", 0)) == per_node:
+                facts["injectors_per_node"] = survivors
+            _shrink_widths(per_node, survivors, "gpu_net")
+        facts["n_gpus"] = survivors
+        facts["ppn"] = int(facts.get("injectors_per_node", 1))
+    elif "hosts_per_pod" in facts:  # TPU family: a rank is a host
+        per_pod = int(facts["hosts_per_pod"])
+        total = int(total_ranks if total_ranks is not None
+                    else facts.get("n_gpus", per_pod))
+        survivors = total - k
+        if survivors < 1:
+            raise ValueError(
+                f"shrink_spec({spec.name!r}): {k} lost of {total} hosts "
+                f"leaves {survivors} < 1 survivor"
+            )
+        if total <= per_pod:
+            chips_per_host = max(int(facts.get("chips_per_pod", per_pod))
+                                 // per_pod, 1)
+            facts["hosts_per_pod"] = survivors
+            facts["chips_per_pod"] = chips_per_host * survivors
+            _shrink_widths(per_pod, survivors, "dcn")
+        facts["n_gpus"] = survivors
+        facts["ppn"] = int(facts.get("injectors_per_node", 1))
+    else:
+        raise ValueError(
+            f"shrink_spec({spec.name!r}): spec has neither gpus_per_node "
+            f"nor hosts_per_pod facts; don't know what a host is here"
+        )
+
+    shrunk = dataclasses.replace(
+        spec,
+        name=name if name is not None else spec.name,
+        tiers=tiers,
+        facts=facts,
+        description=(spec.description +
+                     f" [shrunk: {k} host(s) lost, {survivors} survive]"),
+        derived_from=spec.derived_from or spec.name,
+    )
+    validate_spec(shrunk)
+    return shrunk
 
 
 # --------------------------------------------------------------------------

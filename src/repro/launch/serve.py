@@ -66,6 +66,28 @@ def main(argv=None):
         "--degrade-factor", type=float, default=10.0,
         help="measured/predicted ratio of the injected sag",
     )
+    ap.add_argument(
+        "--fail-at", type=int, default=-1, metavar="STEP",
+        help="inject a host loss at this decode step (chaos drill): the "
+             "serve loop degrades gracefully instead of dying",
+    )
+    ap.add_argument(
+        "--fail-host", type=int, default=0, metavar="RANK",
+        help="which host rank --fail-at loses (default: 0)",
+    )
+    ap.add_argument(
+        "--fail-mode", default="shrink", choices=("shrink", "shed"),
+        help="shrink: shrink_spec + re-register the active machine so "
+             "per-step planning re-decides on the surviving mesh; shed: "
+             "drop one in-flight sequence (batch B -> B-1) and keep going",
+    )
+    ap.add_argument(
+        "--scenario", default="", metavar="PATH",
+        help="drive failures from a scenario JSON "
+             "(python -m repro.runtime.scenarios --out PATH): host_drop "
+             "events map to --fail-mode handling at their step, link sags "
+             "stream drift records into obs.health",
+    )
     args = ap.parse_args(argv)
 
     metrics.enable()
@@ -134,6 +156,84 @@ def main(argv=None):
     degrade_spec = get_machine(degrade_machine) if args.degrade_at >= 0 else None
     degrade_probe_bytes = float(1 << 20)
     degrade_refit_done = False
+
+    # Chaos drill (--fail-at / --scenario): host losses at decode steps.
+    # In shrink mode each loss derives the surviving-mesh spec
+    # (core.machine.shrink_spec) and re-registers it through
+    # runtime.elastic.shrink_and_replan — fingerprint bump + generation
+    # bump, so the NEXT per-step plan call re-decides on the mesh that
+    # actually survives instead of replaying a stale pick (DESIGN.md §11).
+    # In shed mode the loop sheds one in-flight sequence instead: caches
+    # are sliced down to the shapes prefill would have produced at B-1
+    # (via eval_shape — cache leaves don't share a batch axis position).
+    drop_at = {}  # decode step -> [host ranks lost there]
+    scenario_injector = None
+    if args.scenario:
+        from repro.runtime.scenarios import HOST_DROP, Scenario, ScenarioInjector
+
+        sc = Scenario.load(args.scenario)
+        for ev in sc.events:
+            if ev.kind == HOST_DROP:
+                drop_at.setdefault(ev.at, []).append(ev.host)
+        scenario_injector = ScenarioInjector(
+            sc, machine=degrade_machine, spec=get_machine(degrade_machine)
+        )
+        print(f"[serve] scenario {sc.name!r} (seed {sc.seed}): "
+              f"{len(sc.events)} events")
+    if args.fail_at >= 0:
+        drop_at.setdefault(args.fail_at, []).append(args.fail_host)
+
+    def handle_host_drop(step: int, host: int):
+        nonlocal caches, tok
+        metrics.inc("runtime.elastic.host_drops")
+        iid = trace.begin_interval(f"host_drop:{host}", cat="elastic",
+                                   step=step, mode=args.fail_mode)
+        if args.fail_mode == "shrink":
+            from repro.runtime.elastic import shrink_and_replan
+
+            shrunk = shrink_and_replan(degrade_machine, [host])
+            metrics.inc("runtime.elastic.replans")
+            survivors = int(shrunk.facts["n_gpus"])
+            print(f"[serve] host {host} lost at decode step {step}; "
+                  f"shrunk {degrade_machine!r} to {survivors} ranks "
+                  f"(fingerprint {shrunk.fingerprint[:12]}), replanning")
+            trace.end_interval(f"host_drop:{host}", iid, cat="elastic",
+                               survivors=survivors)
+        else:
+            new_b = int(tok.shape[0]) - 1
+            if new_b < 1:
+                print(f"[serve] host {host} lost at decode step {step}; "
+                      f"batch already minimal, continuing")
+                trace.end_interval(f"host_drop:{host}", iid, cat="elastic")
+                return
+            target = jax.eval_shape(
+                lambda p, t, f: dec.prefill(
+                    cfg, p, t, frontend=f, capacity=capacity, dist=dist
+                ),
+                params,
+                jax.ShapeDtypeStruct((new_b, P_len), jnp.int32),
+                None if frontend is None else jax.ShapeDtypeStruct(
+                    (new_b,) + frontend.shape[1:], frontend.dtype
+                ),
+            )[1]
+
+            def _slice(live, tgt):
+                out = live
+                for ax in range(out.ndim):
+                    if out.shape[ax] != tgt.shape[ax]:
+                        out = jax.lax.slice_in_dim(out, 0, tgt.shape[ax],
+                                                   axis=ax)
+                return out
+
+            caches = jax.tree_util.tree_map(_slice, caches, target)
+            tok = tok[:new_b]
+            metrics.inc("runtime.elastic.shed")
+            metrics.gauge("serve.batch.live", new_b)
+            print(f"[serve] host {host} lost at decode step {step}; "
+                  f"shed one sequence (batch {new_b + 1} -> {new_b})")
+            trace.end_interval(f"host_drop:{host}", iid, cat="elastic",
+                               batch=new_b)
+
     out_tokens = []
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     t0 = time.perf_counter()
@@ -155,13 +255,17 @@ def main(argv=None):
                     print(f"[serve] link {lk.key} degraded at decode step {i} "
                           f"(detected in {lk.detection_records} records); "
                           f"refit beta x{fit.beta_scale:.1f}, replanning")
+            if scenario_injector is not None:
+                scenario_injector.feed_drift(i)
+            for host in drop_at.pop(i, ()):
+                handle_host_drop(i, host)
             with trace.span("plan"):
                 collective = select_allreduce_strategy(
                     plan_shape, token_bytes * (P_len + i + 1)
                 )
             logits, caches = decode_fn(params, caches, tok, jnp.int32(P_len + i))
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        metrics.inc("serve.decode.tokens", B)
+        metrics.inc("serve.decode.tokens", int(tok.shape[0]))
     jax.block_until_ready(logits)
     t_dec = time.perf_counter() - t0
     metrics.observe("serve.decode.seconds", t_dec)
@@ -178,7 +282,14 @@ def main(argv=None):
         report = explain_bottleneck(None, token_bytes * (P_len + N), n_msgs=1)
     metrics.gauge("serve.simulated_makespan_s", report.makespan)
 
-    gen = np.stack(out_tokens, axis=1)
+    # shed sequences stop producing tokens mid-run; pad their tail with -1
+    # so the per-step rows still stack into one (B, N) matrix
+    width = max(a.shape[0] for a in out_tokens)
+    gen = np.stack(
+        [np.pad(a, (0, width - a.shape[0]), constant_values=-1)
+         for a in out_tokens],
+        axis=1,
+    )
     print(f"[serve] decoded {N} tokens x {B} seqs in {t_dec:.2f}s "
           f"({B * N / t_dec:.1f} tok/s)")
     print("[serve] sample generations (first 3 rows):")
@@ -203,7 +314,7 @@ def main(argv=None):
     print("[serve] metrics:",
           metrics.summary_line(prefixes=["serve.", "plan_cache.",
                                          "lowering_memo.", "engine.",
-                                         "health."]))
+                                         "health.", "runtime."]))
     return gen
 
 

@@ -1,5 +1,23 @@
 from repro.runtime.straggler import EwmaZScore, StragglerMonitor, StragglerEvent
-from repro.runtime.fault import InjectedFault, LoopState, run_with_recovery
-from repro.runtime.elastic import reshard_tree, restore_on_mesh
+from repro.runtime.fault import (
+    BackoffPolicy,
+    HostLost,
+    InjectedFault,
+    LoopState,
+    RecoveryExhausted,
+    run_with_recovery,
+)
+from repro.runtime.elastic import (
+    host_drop_drill,
+    reshard_tree,
+    restore_on_mesh,
+    shrink_and_replan,
+)
+from repro.runtime.scenarios import (
+    Scenario,
+    ScenarioEvent,
+    ScenarioInjector,
+    single_host_drop,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

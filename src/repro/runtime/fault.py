@@ -4,19 +4,45 @@
 production: a jax distributed runtime error after a node loss; in tests: an
 injected ``InjectedFault``) it restores the latest complete checkpoint and
 replays — the deterministic data pipeline (data/synthetic.py) makes the
-recovery bitwise-exact, which tests assert.
+recovery bitwise-exact, which tests assert.  Both the initial resume and
+the in-loop restart restore the full ``{"params", "opt"}`` blob the loop
+saves: optimizer state always comes from the checkpoint, never silently
+from the live process (a live-opt "restore" replays different updates and
+breaks bitwise recovery).
+
+Failure taxonomy (DESIGN.md §11):
+
+* :class:`InjectedFault` — a transient step failure; restart from the
+  latest checkpoint on the same mesh.
+* :class:`HostLost` — a participant is *gone*.  Restarting on stale mesh
+  assumptions is wrong, so the loop calls the ``on_host_drop`` hook before
+  restoring; the hook is where :func:`repro.core.machine.shrink_spec` +
+  re-registration happens (see :func:`repro.runtime.elastic.shrink_and_replan`)
+  so the replay continues on the surviving mesh with fresh plans.
+* :class:`RecoveryExhausted` — the restart budget ran out.  Raised typed
+  (step, restart count, last error) so orchestrators can distinguish
+  "crashlooping" from the underlying fault; counted under
+  ``runtime.recovery.exhausted``.
+
+Restarts back off exponentially with deterministic jitter
+(:class:`BackoffPolicy`): attempt ``i`` sleeps
+``min(base * multiplier**(i-1), max_delay)`` scaled by a seeded jitter
+draw, so a thundering herd of restarting hosts decorrelates while tests
+replay the exact delays.
 
 Observability: when metrics are enabled the loop counts steps, restarts,
-straggler flags and mitigation advisories (``runtime.*``), and the first
-time the straggler monitor's persistent-slowness advisory fires, the loop
-routes a re-plan request through :func:`repro.obs.health.request_replan` —
-a persistently slow participant means the current schedule's cost
-assumptions are stale, so cached plans are dropped and the next planner
-call re-decides (the same trigger a degraded link uses; DESIGN.md §10).
+host drops, backoff seconds, straggler flags and mitigation advisories
+(``runtime.*``), and the first time the straggler monitor's persistent-
+slowness advisory fires, the loop routes a re-plan request through
+:func:`repro.obs.health.request_replan` — a persistently slow participant
+means the current schedule's cost assumptions are stale, so cached plans
+are dropped and the next planner call re-decides (the same trigger a
+degraded link uses; DESIGN.md §10).
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -26,6 +52,63 @@ from repro.runtime.straggler import StragglerMonitor
 
 class InjectedFault(RuntimeError):
     """Test hook standing in for a node failure."""
+
+
+class HostLost(InjectedFault):
+    """A participant rank is gone (not coming back without a reshape).
+
+    Carries the lost rank so recovery hooks can shrink the mesh spec
+    (:func:`repro.core.machine.shrink_spec`) before the replay resumes.
+    """
+
+    def __init__(self, host: int, msg: Optional[str] = None):
+        super().__init__(msg or f"host {host} lost")
+        self.host = int(host)
+
+
+class RecoveryExhausted(RuntimeError):
+    """``run_with_recovery`` spent its restart budget without finishing."""
+
+    def __init__(self, step: int, restarts: int, last_error: BaseException):
+        super().__init__(
+            f"recovery exhausted after {restarts} restart(s) at step {step}: "
+            f"{type(last_error).__name__}: {last_error}"
+        )
+        self.step = int(step)
+        self.restarts = int(restarts)
+        self.last_error = last_error
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential backoff with deterministic, seeded jitter.
+
+    ``delay(attempt)`` for attempt 1, 2, ... is
+    ``min(base * multiplier**(attempt-1), max_delay)`` scaled by a jitter
+    draw in ``[1 - jitter, 1]``.  The draw is a pure function of
+    ``(seed, attempt)``, so two processes with different seeds
+    decorrelate while one process replays identical delays — which lets
+    tests pin the schedule exactly.
+    """
+
+    base: float = 0.5
+    multiplier: float = 2.0
+    max_delay: float = 30.0
+    jitter: float = 0.5  # fraction of the delay the draw may remove
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.base < 0 or self.multiplier < 1 or self.max_delay < 0:
+            raise ValueError(f"bad backoff policy {self}")
+        if not (0.0 <= self.jitter <= 1.0):
+            raise ValueError(f"jitter {self.jitter} must be in [0, 1]")
+
+    def delay(self, attempt: int) -> float:
+        if attempt < 1:
+            raise ValueError(f"attempt {attempt} must be >= 1")
+        d = min(self.base * self.multiplier ** (attempt - 1), self.max_delay)
+        u = random.Random(f"{self.seed}:{attempt}").random()
+        return d * (1.0 - self.jitter * u)
 
 
 @dataclasses.dataclass
@@ -47,14 +130,19 @@ def run_with_recovery(
     fault_hook: Optional[Callable[[int], None]] = None,  # raise to inject
     max_restarts: int = 8,
     monitor: Optional[StragglerMonitor] = None,
+    backoff: Optional[BackoffPolicy] = None,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    on_host_drop: Optional[Callable[[HostLost, int], None]] = None,
     log: Callable[[str], None] = lambda s: None,
 ) -> LoopState:
     params, opt = init_params, init_opt
     start = 0
     latest = checkpointer.latest_step()
     if latest is not None:
-        params = checkpointer.restore(latest, params)
-        opt = checkpointer.restore_opt(latest, opt) if hasattr(checkpointer, "restore_opt") else opt
+        # the loop saves {"params", "opt"} blobs; resume must restore the
+        # same shape so the optimizer state comes from the checkpoint too
+        blob = checkpointer.restore(latest, {"params": params, "opt": opt})
+        params, opt = blob["params"], blob["opt"]
         start = latest
         log(f"resumed from step {latest}")
 
@@ -103,9 +191,28 @@ def run_with_recovery(
         except InjectedFault as e:
             restarts += 1
             if restarts > max_restarts:
-                raise
+                # flush in-flight async saves before dying: the successor
+                # process resumes from whatever this one managed to write
+                checkpointer.wait()
+                if obs_metrics._ENABLED:
+                    obs_metrics.inc("runtime.recovery.exhausted")
+                raise RecoveryExhausted(step, restarts - 1, e) from e
             if obs_metrics._ENABLED:
                 obs_metrics.inc("runtime.restarts")
+            if isinstance(e, HostLost):
+                if obs_metrics._ENABLED:
+                    obs_metrics.inc("runtime.elastic.host_drops")
+                if on_host_drop is not None:
+                    # reshape *before* restoring: the hook shrinks + re-
+                    # registers the mesh spec so the replay below already
+                    # plans against the surviving world
+                    on_host_drop(e, step)
+            if backoff is not None:
+                d = backoff.delay(restarts)
+                if obs_metrics._ENABLED:
+                    obs_metrics.observe("runtime.recovery.backoff_s", d)
+                if d > 0:
+                    sleep_fn(d)
             checkpointer.wait()
             latest = checkpointer.latest_step()
             log(f"fault at step {step} ({e}); restarting from {latest}")

@@ -151,14 +151,14 @@ def main():
     p0 = init_params(cfgl, jax.random.PRNGKey(0))
     o0 = init_state(p0)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfgl.vocab_size)}
-    p1, _, m1 = train_step(cfgl, run, p0, o0, batch)
+    p1, o1, m1 = train_step(cfgl, run, p0, o0, batch)
 
     mesh_t = mesh2(2, 4, ("data", "model"))
     dist_t = DistContext(mesh=mesh_t, dp_axes=("data",))
     p_sh = specs.param_shardings(p0, mesh_t)
     p0s = jax.device_put(p0, p_sh)
     o0s = init_state(p0s)
-    p2, _, m2 = jax.jit(lambda p, o, b: train_step(cfgl, run, p, o, b, dist=dist_t))(
+    p2, o2, m2 = jax.jit(lambda p, o, b: train_step(cfgl, run, p, o, b, dist=dist_t))(
         p0s, o0s, batch
     )
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2, (m1["loss"], m2["loss"])
@@ -186,6 +186,62 @@ def main():
         )
         assert max(jax.tree_util.tree_leaves(d)) == 0.0
     ok("elastic_reshard")
+
+    # ---- mid-run reshape continuity: shrink 8->4, grow 4->8 -------------------
+    # Continue the run from (p2, o2) twice: a reference continuation on the
+    # original 2x4 mesh, and an elastic one that shrinks to 4 devices for
+    # step 2 then grows back to 8 for step 3 (checkpoint -> restore ->
+    # reshard params AND optimizer state each time).  Global batch is held
+    # constant, so both trajectories must track each other step for step —
+    # the loss-continuity contract runtime/elastic promises.
+    from repro.runtime.elastic import reshard_tree
+
+    def submesh(a, b, names, devs):
+        arr = np.array(devs).reshape(a, b)
+        if AxisType is None:
+            return jax.sharding.Mesh(arr, names)
+        return jax.sharding.Mesh(arr, names, axis_types=(AxisType.Auto,) * 2)
+
+    def step_on(dist_):
+        return jax.jit(lambda p, o, b: train_step(cfgl, run, p, o, b, dist=dist_))
+
+    batch2 = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfgl.vocab_size)}
+    batch3 = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (8, 32), 0, cfgl.vocab_size)}
+    pr, o_r, mr2 = step_on(dist_t)(p2, o2, batch2)
+    pr, o_r, mr3 = step_on(dist_t)(pr, o_r, batch3)
+
+    host = lambda t: jax.tree.map(np.asarray, t)
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td)
+        ck.save(1, {"params": p2, "opt": o2}, block=True)
+        blob = ck.restore(1, host({"params": p2, "opt": o2}))
+        mesh_small = submesh(2, 2, ("data", "model"), jax.devices()[:4])
+        dist_s = DistContext(mesh=mesh_small, dp_axes=("data",))
+        ps = reshard_tree(blob["params"],
+                          specs.param_shardings(blob["params"], mesh_small))
+        os_ = reshard_tree(blob["opt"],
+                           specs.opt_shardings(blob["params"], mesh_small))
+        ps, os_, ms2 = step_on(dist_s)(ps, os_, batch2)
+        assert abs(float(mr2["loss"]) - float(ms2["loss"])) < 2e-2, (
+            mr2["loss"], ms2["loss"])
+        ok("elastic_shrink_continuity")
+
+        ck.save(2, {"params": ps, "opt": os_}, block=True)
+        blob2 = ck.restore(2, host({"params": ps, "opt": os_}))
+        pg = reshard_tree(blob2["params"],
+                          specs.param_shardings(blob2["params"], mesh_t))
+        og = reshard_tree(blob2["opt"],
+                          specs.opt_shardings(blob2["params"], mesh_t))
+        pg, og, mg3 = step_on(dist_t)(pg, og, batch3)
+        assert abs(float(mr3["loss"]) - float(mg3["loss"])) < 2e-2, (
+            mr3["loss"], mg3["loss"])
+        d = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(
+                a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            pg, pr,
+        )
+        assert max(jax.tree_util.tree_leaves(d)) < 0.15
+        ok("elastic_grow_continuity")
 
     print("ALL_MULTIDEVICE_OK", flush=True)
 

@@ -1,0 +1,513 @@
+"""Elastic fault-domain runtime: scenarios, shrink_spec, backoff, recovery.
+
+Covers the DESIGN.md §11 contract end to end: the deterministic scenario
+DSL (timeline replay, DES capacity overrides, JSON round-trip), the
+shrink-spec re-plan trigger (fingerprint bump -> plan-cache miss ->
+different pick on the shrunk mesh), typed recovery exhaustion, the
+checkpoint-resume opt-state regression, seeded backoff, the serve-path
+shape-consistency lints, and the full host_drop_drill the CI chaos job
+gates on.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.comms import autotune
+from repro.core.machine import (
+    get_machine,
+    register_machine,
+    registry_generation,
+    shrink_spec,
+)
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.obs import health, metrics
+from repro.runtime.fault import (
+    BackoffPolicy,
+    HostLost,
+    InjectedFault,
+    RecoveryExhausted,
+    run_with_recovery,
+)
+from repro.runtime.scenarios import (
+    FLAP,
+    HOST_DROP,
+    LINK_SAG,
+    RECOVER,
+    STRAGGLER,
+    Scenario,
+    ScenarioEvent,
+    ScenarioInjector,
+    generate,
+    single_host_drop,
+)
+
+
+# --------------------------------------------------------------------------
+# Scenario DSL.
+# --------------------------------------------------------------------------
+
+def test_scenario_event_validation():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        ScenarioEvent(at=0, kind="meteor")
+    with pytest.raises(ValueError, match="needs host"):
+        ScenarioEvent(at=0, kind=HOST_DROP)
+    with pytest.raises(ValueError, match="needs tier"):
+        ScenarioEvent(at=0, kind=LINK_SAG, factor=2.0)
+    with pytest.raises(ValueError, match="must be > 1"):
+        ScenarioEvent(at=0, kind=LINK_SAG, tier="dcn", factor=0.5)
+    with pytest.raises(ValueError, match="duration >= 1"):
+        ScenarioEvent(at=0, kind=FLAP, tier="dcn", host=0, factor=2.0)
+    with pytest.raises(ValueError, match="must be >= 0"):
+        ScenarioEvent(at=-1, kind=RECOVER)
+
+
+def test_scenario_replay_semantics():
+    sc = Scenario([
+        ScenarioEvent(at=2, kind=LINK_SAG, tier="gpu_net", factor=4.0),
+        ScenarioEvent(at=3, kind=STRAGGLER, host=1, factor=3.0, duration=2),
+        ScenarioEvent(at=4, kind=HOST_DROP, host=5),
+        ScenarioEvent(at=6, kind=RECOVER, tier="gpu_net"),
+    ])
+    assert sc.state_at(1).sags == ()
+    assert sc.state_at(2).sags == (("gpu_net", None, 4.0),)
+    # straggler active for [3, 5), max factor wins
+    assert sc.state_at(3).straggler_factor == 3.0
+    assert sc.state_at(4).straggler_factor == 3.0
+    assert sc.state_at(5).straggler_factor == 1.0
+    # host loss is sticky; qualified recover ends only the sag
+    assert sc.state_at(4).lost_hosts == (5,)
+    assert sc.state_at(6).lost_hosts == (5,)
+    assert sc.state_at(6).sags == ()
+    assert sc.final_lost_hosts() == (5,)
+
+
+def test_scenario_flap_toggles_and_recover_returns_host():
+    sc = Scenario([
+        ScenarioEvent(at=0, kind=FLAP, tier="dcn", host=0, factor=2.0,
+                      duration=2),
+        ScenarioEvent(at=1, kind=HOST_DROP, host=3),
+        ScenarioEvent(at=5, kind=RECOVER, host=3),
+    ])
+    # on for [0,2), off [2,4), on [4,6), ...
+    assert sc.state_at(0).sags and sc.state_at(1).sags
+    assert sc.state_at(2).sags == () and sc.state_at(3).sags == ()
+    assert sc.state_at(4).sags
+    assert sc.state_at(4).lost_hosts == (3,)
+    assert sc.state_at(5).lost_hosts == ()
+
+
+def test_scenario_json_round_trip_and_determinism():
+    a = generate(11, 20, hosts=6, n_events=5)
+    b = generate(11, 20, hosts=6, n_events=5)
+    c = generate(12, 20, hosts=6, n_events=5)
+    assert a.to_json() == b.to_json()
+    assert a.to_json() != c.to_json()
+    back = Scenario.from_json(a.to_json())
+    assert back.to_json() == a.to_json()
+    assert back.seed == 11
+
+
+def test_scenario_capacity_overrides_name_canonical_pools():
+    spec = get_machine("summit")
+    sc = Scenario([
+        ScenarioEvent(at=1, kind=LINK_SAG, tier="gpu_net", factor=3.0),
+        ScenarioEvent(at=2, kind=HOST_DROP, host=2),
+    ])
+    ov1 = sc.capacity_overrides(spec, 1)
+    # the sag squeezes every gpu_net locality pool to width // factor
+    assert ov1["gpu_net:off-node.rank0"] == max(1, 6 // 3)
+    assert all(k.partition(":")[0] == "gpu_net" for k in ov1)
+    ov2 = sc.capacity_overrides(spec, 2)
+    # a lost host collapses to one slot on EVERY tier at that rank only
+    assert ov2["gpu_net:off-node.rank2"] == 1
+    assert ov2["cpu_net:on-node.rank2"] == 1
+    assert "cpu_net:on-node.rank3" not in {
+        k for k, v in ov2.items() if v == 1 and k.endswith(".rank3")
+    }
+    # overrides are engine-legal: capacity >= 1 always
+    assert all(v >= 1 for v in {**ov1, **ov2}.values())
+
+
+def test_scenario_injector_fires_each_drop_once():
+    sc = Scenario([
+        ScenarioEvent(at=3, kind=HOST_DROP, host=7),
+        ScenarioEvent(at=3, kind=HOST_DROP, host=8),
+    ])
+    inj = ScenarioInjector(sc)
+    with pytest.raises(HostLost) as e1:
+        inj.fault_hook(3)
+    assert e1.value.host == 7
+    with pytest.raises(HostLost) as e2:
+        inj.fault_hook(3)  # replay after restart: next unfired event
+    assert e2.value.host == 8
+    inj.fault_hook(3)  # both fired: the step replays clean
+    assert inj.step_time_scale(3) == 1.0
+
+
+# --------------------------------------------------------------------------
+# shrink_spec.
+# --------------------------------------------------------------------------
+
+def test_shrink_spec_single_node_gpu():
+    base = get_machine("lassen")  # 4 GPUs per node
+    shrunk = shrink_spec(base, [3])
+    assert shrunk.facts["n_gpus"] == 3
+    assert shrunk.facts["gpus_per_node"] == 3
+    assert shrunk.facts["injectors_per_node"] == 3
+    assert shrunk.facts["ppn"] == 3
+    assert shrunk.facts["cpu_cores_per_node"] == \
+        base.facts["cores_per_gpu"] * 3
+    for key, tier in shrunk.tiers.items():
+        if key.startswith("gpu_net"):
+            assert tier.width == 3
+    assert shrunk.fingerprint != base.fingerprint
+    assert shrunk.provenance == base.provenance
+    assert shrunk.derived_from == "lassen"
+    assert shrunk.name == "lassen"  # same name: re-registering IS the trigger
+
+
+def test_shrink_spec_multi_node_keeps_node_shape():
+    base = get_machine("summit")
+    shrunk = shrink_spec(base, 4, total_ranks=12)
+    assert shrunk.facts["n_gpus"] == 8
+    assert shrunk.facts["gpus_per_node"] == base.facts["gpus_per_node"]
+    assert shrunk.facts["ppn"] == base.facts["injectors_per_node"]
+    # node shape untouched -> tier widths untouched
+    for key, tier in shrunk.tiers.items():
+        assert tier.width == base.tiers[key].width
+    assert shrunk.fingerprint != base.fingerprint
+
+
+def test_shrink_spec_tpu_scales_pod():
+    base = get_machine("tpu_v5e")
+    hosts = int(base.facts["hosts_per_pod"])
+    chips_per_host = int(base.facts["chips_per_pod"]) // hosts
+    shrunk = shrink_spec(base, [0, 1])
+    assert shrunk.facts["hosts_per_pod"] == hosts - 2
+    assert shrunk.facts["chips_per_pod"] == chips_per_host * (hosts - 2)
+    assert shrunk.facts["n_gpus"] == hosts - 2
+    assert shrunk.tiers["dcn"].width == hosts - 2
+    assert shrunk.fingerprint != base.fingerprint
+
+
+def test_shrink_spec_errors():
+    base = get_machine("lassen")
+    with pytest.raises(ValueError, match="survivor"):
+        shrink_spec(base, 4)
+    with pytest.raises(ValueError, match="negative rank"):
+        shrink_spec(base, [-1])
+    # repeated shrinks accumulate via the n_gpus fact
+    once = shrink_spec(base, 1)
+    twice = shrink_spec(once, 1)
+    assert twice.facts["n_gpus"] == 2
+    assert twice.derived_from == "lassen"  # lineage points at the root
+
+
+def test_select_schedule_resolves_peers_from_surviving_ranks():
+    base = get_machine("summit")
+    spec = dataclasses.replace(
+        base, name="t_elastic_peers",
+        facts={**base.facts, "n_gpus": 12, "ppn": 6},
+    )
+    register_machine("t_elastic_peers", spec)
+    implicit = autotune.select_schedule("t_elastic_peers", 8192.0, 8)
+    autotune.clear_plan_cache()
+    explicit = autotune.select_schedule("t_elastic_peers", 8192.0, 8, peers=12)
+    assert implicit == explicit
+
+
+# --------------------------------------------------------------------------
+# Backoff + typed exhaustion.
+# --------------------------------------------------------------------------
+
+def test_backoff_policy_deterministic_and_bounded():
+    pol = BackoffPolicy(base=0.5, multiplier=2.0, max_delay=3.0, jitter=0.5,
+                        seed=42)
+    delays = [pol.delay(i) for i in range(1, 8)]
+    assert delays == [pol.delay(i) for i in range(1, 8)]  # replayable
+    for i, d in enumerate(delays, start=1):
+        cap = min(0.5 * 2.0 ** (i - 1), 3.0)
+        assert 0.5 * cap <= d <= cap
+    # different seeds decorrelate
+    other = BackoffPolicy(base=0.5, multiplier=2.0, max_delay=3.0,
+                          jitter=0.5, seed=43)
+    assert [other.delay(i) for i in range(1, 8)] != delays
+    with pytest.raises(ValueError):
+        BackoffPolicy(jitter=1.5)
+    with pytest.raises(ValueError):
+        BackoffPolicy(multiplier=0.5)
+    with pytest.raises(ValueError):
+        pol.delay(0)
+
+
+def test_recovery_exhausted_is_typed_and_counted(tmp_path):
+    metrics.swap_registry()
+    metrics.enable()
+
+    def hook(step):
+        if step == 2:
+            raise InjectedFault("always")
+
+    with pytest.raises(RecoveryExhausted) as ei:
+        run_with_recovery(
+            step_fn=lambda p, o, b: (p, o, {}),
+            batch_fn=lambda s: {},
+            init_params={"w": np.float64(0)}, init_opt={"m": np.float64(0)},
+            checkpointer=Checkpointer(str(tmp_path)),
+            total_steps=6, checkpoint_every=2,
+            fault_hook=hook, max_restarts=3,
+        )
+    exc = ei.value
+    assert exc.step == 2
+    assert exc.restarts == 3
+    assert isinstance(exc.last_error, InjectedFault)
+    assert "3 restart(s) at step 2" in str(exc)
+    c = metrics.to_json()["counters"]
+    assert c["runtime.recovery.exhausted"] == 1.0
+    assert c["runtime.restarts"] == 3.0
+
+
+def test_backoff_delays_are_slept_and_observed(tmp_path):
+    metrics.swap_registry()
+    metrics.enable()
+    slept = []
+    faults = {1, 3}
+
+    def hook(step):
+        if step in faults:
+            faults.remove(step)
+            raise InjectedFault("boom")
+
+    pol = BackoffPolicy(base=0.2, multiplier=2.0, max_delay=5.0, seed=7)
+    state = run_with_recovery(
+        step_fn=lambda p, o, b: (p, o, {}),
+        batch_fn=lambda s: {},
+        init_params={"w": np.float64(0)}, init_opt={"m": np.float64(0)},
+        checkpointer=Checkpointer(str(tmp_path)),
+        total_steps=5, checkpoint_every=2,
+        fault_hook=hook, backoff=pol, sleep_fn=slept.append,
+    )
+    assert state.step == 5
+    assert slept == [pol.delay(1), pol.delay(2)]
+    h = metrics.to_json()["histograms"]["runtime.recovery.backoff_s"]
+    assert h["count"] == 2
+
+
+# --------------------------------------------------------------------------
+# Opt-state resume regression (the silent-fallback fix).
+# --------------------------------------------------------------------------
+
+def _sgd_step(params, opt, batch):
+    g = params["w"] - batch["target"]
+    m = 0.9 * opt["m"] + g
+    return {"w": params["w"] - 0.1 * m}, {"m": m}, {}
+
+
+def test_resume_restores_optimizer_state_from_checkpoint(tmp_path):
+    batch_fn = lambda s: {"target": np.float64(s % 3)}
+    init_p = {"w": np.float64(0.0)}
+    init_o = {"m": np.float64(0.0)}
+    ck = Checkpointer(str(tmp_path))
+
+    # uninterrupted reference
+    full = run_with_recovery(
+        step_fn=_sgd_step, batch_fn=batch_fn,
+        init_params=dict(init_p), init_opt=dict(init_o),
+        checkpointer=Checkpointer(str(tmp_path / "ref")),
+        total_steps=8, checkpoint_every=4,
+    )
+
+    # first process: runs to the step-4 checkpoint, then dies mid-flight
+    with pytest.raises(RecoveryExhausted):
+        run_with_recovery(
+            step_fn=_sgd_step, batch_fn=batch_fn,
+            init_params=dict(init_p), init_opt=dict(init_o),
+            checkpointer=ck, total_steps=8, checkpoint_every=4,
+            fault_hook=lambda s: (_ for _ in ()).throw(InjectedFault("die"))
+            if s == 6 else None,
+            max_restarts=0,
+        )
+
+    # second process resumes with DIFFERENT live init state: both params
+    # and momentum must come from the checkpoint, bitwise — the old
+    # hasattr(restore_opt) fallback silently reused the live opt here
+    resumed = run_with_recovery(
+        step_fn=_sgd_step, batch_fn=batch_fn,
+        init_params={"w": np.float64(123.0)},
+        init_opt={"m": np.float64(-7.0)},
+        checkpointer=ck, total_steps=8, checkpoint_every=4,
+    )
+    assert resumed.step == full.step == 8
+    assert float(resumed.params["w"]) == float(full.params["w"])
+    assert float(resumed.opt_state["m"]) == float(full.opt_state["m"])
+
+
+# --------------------------------------------------------------------------
+# HostLost routing + the full drill.
+# --------------------------------------------------------------------------
+
+def test_host_lost_routes_on_host_drop_hook(tmp_path):
+    metrics.swap_registry()
+    metrics.enable()
+    seen = []
+    fired = []
+
+    def hook(step):
+        if step == 3 and not fired:
+            fired.append(step)
+            raise HostLost(5)
+
+    state = run_with_recovery(
+        step_fn=lambda p, o, b: (p, o, {}),
+        batch_fn=lambda s: {},
+        init_params={"w": np.float64(0)}, init_opt={"m": np.float64(0)},
+        checkpointer=Checkpointer(str(tmp_path)),
+        total_steps=6, checkpoint_every=2,
+        fault_hook=hook,
+        on_host_drop=lambda e, step: seen.append((e.host, step)),
+    )
+    assert state.step == 6
+    assert seen == [(5, 3)]
+    c = metrics.to_json()["counters"]
+    assert c["runtime.elastic.host_drops"] == 1.0
+    assert c["runtime.restarts"] == 1.0
+
+
+def test_shrink_and_replan_invalidates_plan_cache():
+    from repro.runtime.elastic import shrink_and_replan
+
+    mon = health.reset()
+    base = get_machine("summit")
+    spec = dataclasses.replace(
+        base, name="t_elastic_replan",
+        facts={**base.facts, "n_gpus": 12, "ppn": 6},
+    )
+    register_machine("t_elastic_replan", spec)
+    gen0 = registry_generation()
+    stale = autotune.select_schedule("t_elastic_replan", 8192.0, 8)
+    hits0 = autotune.plan_cache_info()["hits"]
+    autotune.select_schedule("t_elastic_replan", 8192.0, 8)
+    assert autotune.plan_cache_info()["hits"] == hits0 + 1  # warm
+
+    shrunk = shrink_and_replan("t_elastic_replan", [8, 9, 10, 11])
+    assert registry_generation() > gen0
+    assert get_machine("t_elastic_replan").fingerprint == shrunk.fingerprint
+    misses0 = autotune.plan_cache_info()["misses"]
+    fresh = autotune.select_schedule("t_elastic_replan", 8192.0, 8)
+    # generation bump dropped the cache: this is a recompute, not a hit
+    assert autotune.plan_cache_info()["misses"] == misses0 + 1
+    assert fresh != stale
+    assert [r["reason"] for r in mon.replans] == ["host_drop"]
+
+
+def test_host_drop_drill_end_to_end():
+    """The ISSUE acceptance drill: drop at step k -> restore -> shrink_spec
+    re-registered (fingerprint differs, plan cache miss) -> different pick
+    on the shrunk mesh -> all steps complete with loss continuity —
+    deterministic under the fixed scenario seed."""
+    from repro.runtime.elastic import host_drop_drill
+
+    health.reset()
+    metrics.swap_registry()
+    metrics.enable()
+    ev = host_drop_drill(machine="t_elastic_drill")
+    assert ev["survived"] and ev["completed_steps"] == 12
+    assert ev["loss_continuity"]
+    assert ev["fingerprint_changed"]
+    assert ev["generations_bumped"] == len(ev["reshapes"]) == 4
+    assert ev["plan_cache_misses"] >= 1
+    assert ev["survivors"] == 8
+    assert ev["pick_changed"]
+    assert ev["stale_pick"] == "node_aware_alltoall"
+    assert ev["fresh_pick"] == "bruck_alltoall"
+    assert ev["replanned_beats_stale"]
+    assert ev["t_fresh_on_shrunk"] <= ev["t_stale_on_shrunk"]
+    assert ev["des_overrides"] > 0
+    # n_gpus walks down one host per restart
+    assert [r["n_gpus"] for r in ev["reshapes"]] == [11, 10, 9, 8]
+    # deterministic: a second run reproduces every decision field
+    health.reset()
+    ev2 = host_drop_drill(machine="t_elastic_drill")
+    for key in ("stale_pick", "fresh_pick", "survivors", "speedup",
+                "fingerprint_after", "backoff_delays", "scenario"):
+        assert ev2[key] == ev[key], key
+    c = metrics.to_json()["counters"]
+    assert c["runtime.elastic.host_drops"] == 8.0  # two drills x 4 drops
+    assert c["health.replan.host_drop"] == 8.0
+
+
+def test_host_drop_drill_single_drop_from_scenario_helper():
+    sc = single_host_drop(4, 2)
+    assert [e.kind for e in sc.events] == [HOST_DROP]
+    assert sc.lost_hosts(4) == (2,)
+    assert sc.lost_hosts(3) == ()
+
+
+# --------------------------------------------------------------------------
+# Lint satellites: width/fact + derived-spec consistency.
+# --------------------------------------------------------------------------
+
+def _findings(spec, code):
+    from repro.analysis.specs import lint_spec
+
+    return [f for f in lint_spec(spec) if f.check == code]
+
+
+def test_lint_width_fact_mismatch_flags_tampered_spec():
+    base = get_machine("summit")
+    tiers = dict(base.tiers)
+    k = "gpu_net:off-node"
+    tiers[k] = dataclasses.replace(tiers[k], width=2)  # facts say 6
+    bad = dataclasses.replace(base, name="t_elastic_bad_width", tiers=tiers)
+    hits = _findings(bad, "spec.width_fact_mismatch")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    assert "gpu_net:off-node" in hits[0].detail
+
+
+def test_lint_derived_spec_requirements():
+    base = get_machine("summit")
+    # a shrink_spec output lints clean
+    assert not [f for f in _findings(shrink_spec(base, 2, total_ranks=12),
+                                     "spec.derived_facts")]
+    assert not _findings(shrink_spec(get_machine("lassen"), 1),
+                         "spec.width_fact_mismatch")
+    # derived but missing the elastic facts -> error
+    bare = dataclasses.replace(base, name="t_elastic_bare",
+                               derived_from="summit")
+    hits = _findings(bare, "spec.derived_facts")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    assert "n_gpus" in hits[0].detail
+    # ppn disagreeing with injectors_per_node -> error
+    skew = dataclasses.replace(
+        base, name="t_elastic_skew", derived_from="summit",
+        facts={**base.facts, "n_gpus": 8, "ppn": 2},
+    )
+    hits = _findings(skew, "spec.derived_facts")
+    assert len(hits) == 1 and "injectors_per_node" in hits[0].detail
+    # inconsistent counts -> error
+    neg = dataclasses.replace(
+        base, name="t_elastic_neg", derived_from="summit",
+        facts={**base.facts, "n_gpus": 2, "ppn": 6},
+    )
+    assert _findings(neg, "spec.derived_facts")
+
+
+def test_lint_clean_on_all_registered_machines():
+    from repro.analysis.specs import lint_spec
+
+    for name in ("summit", "lassen", "gh200", "tpu_v5e"):
+        errs = [f for f in lint_spec(get_machine(name))
+                if f.severity == "error"]
+        assert not errs, (name, errs)
+
+
+def test_backoff_full_jitter_math():
+    pol = BackoffPolicy(base=1.0, multiplier=3.0, max_delay=10.0, jitter=0.0,
+                        seed=0)
+    assert pol.delay(1) == 1.0
+    assert pol.delay(2) == 3.0
+    assert pol.delay(3) == 9.0
+    assert pol.delay(4) == 10.0  # capped
+    assert math.isclose(pol.delay(10), 10.0)

@@ -1,6 +1,6 @@
 """The paper's own claims, asserted against our implementation of its models.
 
-Each test cites the figure/table it validates (see DESIGN.md §8 index).
+Each test cites the figure/table it validates (see DESIGN.md §12 index).
 """
 import numpy as np
 import pytest
